@@ -1,0 +1,124 @@
+"""Paper §7.1 / Fig. 8–9: cluster-level utilization improvement and GPU
+savings from Valve colocation.
+
+A fleet of 8-GPU nodes runs heterogeneous bursty online services (telemetry
+synthesized from the same generators as the node sim); offline jobs —
+including multi-GPU model-parallel ones gated by the P_multi ≥ 0.95
+alignment rule — are placed by the Eq. 1 scheduler.  Metrics: improved GPU
+utilization (fraction of time GPUs run offline compute) and saved GPUs
+(Σ normalized offline throughput).  Paper: +34.6 % utilization, 2,170 GPUs
+saved on 8,054 (≈ 27 % of fleet).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.cluster.perfmodel import (GPUTelemetry, NodeTelemetry,
+                                          profile_workload)
+from repro.core.cluster.scheduler import ClusterScheduler, OfflineJob
+
+
+def _busy_intervals(rng, horizon: float, duty: float, *,
+                    aligned_with=None, align: float = 0.0
+                    ) -> List[Tuple[float, float]]:
+    """Alternating busy/idle periods with the requested duty cycle; with
+    ``aligned_with`` reuse that GPU's intervals for an ``align`` fraction
+    (models multi-GPU online services with partial overlap)."""
+    if aligned_with is not None and align > 0:
+        out = []
+        for (a, b) in aligned_with:
+            if rng.random() < align:
+                out.append((a, b))
+            else:
+                shift = rng.uniform(0, 30.0)
+                out.append((min(a + shift, horizon),
+                            min(b + shift, horizon)))
+        return out
+    out = []
+    t = rng.uniform(0, 20.0)
+    while t < horizon:
+        busy = rng.exponential(20.0 * duty / max(1 - duty, 0.05))
+        idle = rng.exponential(20.0)
+        out.append((t, min(t + busy, horizon)))
+        t += busy + idle
+    return out
+
+
+def make_fleet(n_nodes: int = 64, gpus_per_node: int = 8, *,
+               horizon: float = 600.0, seed: int = 0
+               ) -> List[NodeTelemetry]:
+    rng = np.random.default_rng(seed)
+    nodes = []
+    total_pages = 4096
+    for i in range(n_nodes):
+        duty = rng.uniform(0.15, 0.65)       # over-provisioned online
+        aligned = rng.random() < 0.68        # paper: 32% partial overlap
+        gpus = []
+        base_iv = None
+        for g in range(gpus_per_node):
+            iv = _busy_intervals(rng, horizon, duty,
+                                 aligned_with=base_iv,
+                                 align=0.97 if aligned else 0.4)
+            if base_iv is None:
+                base_iv = iv
+            ts = np.linspace(0, horizon, 64)
+            # free memory dips while busy (online KV), high while idle
+            busy_at = np.array([any(a <= t < b for a, b in iv) for t in ts])
+            free = np.where(busy_at,
+                            rng.uniform(0.2, 0.5) * total_pages,
+                            rng.uniform(0.7, 0.95) * total_pages)
+            gpus.append(GPUTelemetry(iv, ts, free, window=(0, horizon)))
+        nodes.append(NodeTelemetry(f'node{i}', gpus))
+    return nodes
+
+
+def run(out_path: str = 'results/cluster_utilization.json',
+        n_nodes: int = 64, seed: int = 0) -> Dict:
+    rng = np.random.default_rng(seed + 1)
+    nodes = make_fleet(n_nodes, seed=seed)
+    sched = ClusterScheduler(nodes)
+
+    jobs = []
+    for j in range(n_nodes * 6):
+        k = int(rng.choice([1, 1, 1, 1, 2, 4]))   # mostly single-GPU
+        prof = profile_workload(
+            f'job{j}', thrput_max=1000.0,
+            m_req=float(rng.choice([1024, 2048, 3072])), n_gpus=k)
+        jobs.append(OfflineJob(prof, sla=float(rng.uniform(0.2, 0.5))))
+    placed = 0
+    for job in jobs:
+        if sched.place(job) is not None:
+            placed += 1
+
+    total_gpus = n_nodes * 8
+    util_gain = sched.utilization_gain()
+    saved = sched.gpus_saved()
+
+    # baseline online-only utilization for the +X% framing
+    online_util = float(np.mean([1 - g.idle_fraction()
+                                 for n in nodes for g in n.gpus]))
+    result = {
+        'nodes': n_nodes, 'gpus': total_gpus,
+        'jobs_submitted': len(jobs), 'jobs_placed': placed,
+        'jobs_pending': len(sched.pending),
+        'online_utilization': online_util,
+        'utilization_gain': util_gain,
+        'gpus_saved': saved,
+        'gpus_saved_frac_of_fleet': saved / total_gpus,
+    }
+    with open(out_path, 'w') as f:
+        json.dump(result, f, indent=1)
+    print(f'fleet: {total_gpus} GPUs, online util {online_util:.1%}')
+    print(f'placed {placed}/{len(jobs)} offline jobs '
+          f'(multi-GPU gated by P_multi ≥ 0.95)')
+    print(f'utilization gain +{util_gain:.1%} (paper: +34.6%)')
+    print(f'GPUs saved: {saved:.0f} ({saved / total_gpus:.1%} of fleet; '
+          f'paper: 2170/8054 = 27%)')
+    return result
+
+
+if __name__ == '__main__':
+    run()

@@ -1,0 +1,93 @@
+"""Paper Fig. 10: TTFT / TPOT / offline-throughput across 10 production
+workload pairs × 6 colocation strategies.
+
+Per pair and strategy we report the MEAN TTFT/TPOT increase vs the online
+standalone run and offline throughput normalized to Channel+Prism (the
+no-memory-preemption bound, as the paper normalizes).  The headline claims
+this reproduces: Valve < 5 % TTFT and < 2 % TPOT increase across
+workloads, at ≈ Channel+Prism offline throughput.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.sim.colocation import (SimConfig, run_online_standalone,
+                                       run_strategy)
+from repro.core.sim.strategies import STRATEGIES
+from repro.core.sim.workload import make_workload_pairs
+
+
+def _pct_increase(new: Dict[str, float], base: Dict[str, float]) -> float:
+    vals = [(new[k] - base[k]) / max(base[k], 1e-9) * 100.0
+            for k in base if k in new]
+    return float(np.mean(vals)) if vals else 0.0
+
+
+def run(out_path: str = 'results/colocation_matrix.json',
+        n_pairs: int = 10, horizon_s: float = 300.0) -> Dict:
+    cfg = SimConfig()
+    pairs = make_workload_pairs(n_pairs, horizon_s=horizon_s)
+    rows: List[Dict] = []
+    for pair in pairs:
+        base = run_online_standalone(pair, cfg)
+        prism = run_strategy(pair, 'Channel', 'Prism', cfg)
+        for cpn, mpn in STRATEGIES:
+            r = (prism if (cpn, mpn) == ('Channel', 'Prism')
+                 else run_strategy(pair, cpn, mpn, cfg))
+            rows.append({
+                'pair': pair.name,
+                'memory_bursty': pair.memory_bursty,
+                'strategy': f'{cpn}+{mpn}',
+                'ttft_increase_pct': _pct_increase(r.ttft, base.ttft),
+                'tpot_increase_pct': _pct_increase(r.tpot, base.tpot),
+                'offline_norm': r.offline_throughput
+                / max(prism.offline_throughput, 1e-9),
+                'preemptions': r.compute_stats.preemptions,
+                'max_preempt_per_request': r.max_preempt_per_request,
+                'recompute_tokens': r.recompute_tokens,
+            })
+        print(f'[colocation] {pair.name} done', flush=True)
+
+    # aggregate per strategy
+    summary = {}
+    for cpn, mpn in STRATEGIES:
+        s = f'{cpn}+{mpn}'
+        sel = [r for r in rows if r['strategy'] == s]
+        summary[s] = {
+            'ttft_increase_pct_mean': float(np.mean(
+                [r['ttft_increase_pct'] for r in sel])),
+            'ttft_increase_pct_max': float(np.max(
+                [r['ttft_increase_pct'] for r in sel])),
+            'tpot_increase_pct_mean': float(np.mean(
+                [r['tpot_increase_pct'] for r in sel])),
+            'tpot_increase_pct_max': float(np.max(
+                [r['tpot_increase_pct'] for r in sel])),
+            'offline_norm_mean': float(np.mean(
+                [r['offline_norm'] for r in sel])),
+            'max_preempt_per_request': int(np.max(
+                [r['max_preempt_per_request'] for r in sel])),
+        }
+    result = {'rows': rows, 'summary': summary}
+    with open(out_path, 'w') as f:
+        json.dump(result, f, indent=1)
+
+    print(f'{"strategy":24s} {"dTTFT%":>8} {"dTPOT%":>8} {"off(norm)":>10} '
+          f'{"maxPre/req":>10}')
+    for s, v in summary.items():
+        print(f'{s:24s} {v["ttft_increase_pct_mean"]:8.1f} '
+              f'{v["tpot_increase_pct_mean"]:8.1f} '
+              f'{v["offline_norm_mean"]:10.2f} '
+              f'{v["max_preempt_per_request"]:10d}')
+    valve = summary['Channel+OurMem']
+    print(f"Valve: TTFT +{valve['ttft_increase_pct_mean']:.1f}% "
+          f"TPOT +{valve['tpot_increase_pct_mean']:.1f}% "
+          f"(paper: <5% / <2%), ≤{valve['max_preempt_per_request']} "
+          f"preemption/request")
+    return result
+
+
+if __name__ == '__main__':
+    run()

@@ -1,0 +1,98 @@
+"""Paper Fig. 11: Valve's selective handle reclamation (Algorithm 1) vs
+FIFO, sweeping reclamation rate and reclaimed size.
+
+Metric: offline throughput loss vs the undisturbed run — Algorithm 1 picks
+handles tied to the fewest in-flight request tokens, so fewer tokens
+recompute.  Paper: 22.9 %–40.1 % lower throughput loss than FIFO.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.sim.colocation import (NodeSim, SimConfig,
+                                       run_offline_standalone)
+from repro.core.sim.strategies import Channel, OurMem
+from repro.core.sim.workload import (OnlineRequest, OnlineWorkload,
+                                     WorkloadPair, make_workload_pairs)
+
+
+def _pulse_pair(period_s: float, pages: int, page_tokens: int,
+                horizon_s: float, hold_s: float = 4.0) -> WorkloadPair:
+    """Online trace that periodically allocates a burst of ``pages`` and
+    releases it — a pure memory-reclamation driver (7B-vs-7B colocation as
+    in the paper's Fig. 11 setup).
+
+    The offline side mixes request sizes so pool handles end up holding
+    different numbers of in-flight requests — the fragmentation Algorithm 1
+    exploits (uniform sizes make every handle look identical and the policy
+    choice moot)."""
+    from repro.core.sim.workload import OfflineWorkload
+    reqs: List[OnlineRequest] = []
+    t = 10.0
+    i = 0
+    tokens = pages * page_tokens
+    while t < horizon_s - hold_s:
+        # one request whose prompt occupies the pages and decodes shortly
+        reqs.append(OnlineRequest(f'pulse-{i}', t, tokens, 8))
+        t += period_s
+        i += 1
+    offline = OfflineWorkload(
+        'mixed-offline', prompt_tokens=1024, output_tokens=192,
+        max_batch=48,
+        prompt_choices=(128, 256, 512, 1024, 2048, 4096),
+        output_choices=(32, 64, 128, 256, 512), seed=1)
+    return WorkloadPair('pulse', OnlineWorkload('pulse', reqs, horizon_s),
+                        offline)
+
+
+def run(out_path: str = 'results/eviction_policy.json',
+        horizon_s: float = 240.0) -> Dict:
+    cfg = SimConfig()
+    rows = []
+    base_pair = _pulse_pair(30.0, 512, cfg.page_tokens, horizon_s)
+    ref = run_offline_standalone(base_pair, cfg).offline_throughput
+
+    for sweep, values in (('rate', [60.0, 30.0, 15.0, 8.0]),
+                          ('size', [256, 512, 1024, 1536])):
+        for v in values:
+            period = v if sweep == 'rate' else 30.0
+            pages = 512 if sweep == 'rate' else v
+            pair = _pulse_pair(period, pages, cfg.page_tokens, horizon_s)
+            out = {}
+            for policy in ('valve', 'fifo'):
+                mp = OurMem(cfg.total_pages, cfg.page_tokens, policy=policy)
+                r = NodeSim(pair, Channel(), mp, cfg).run()
+                out[policy] = {
+                    'thrput': r.offline_throughput,
+                    'loss': max(0.0, 1 - r.offline_throughput / ref),
+                    'recompute_tokens': r.recompute_tokens,
+                }
+            lv, lf = out['valve']['loss'], out['fifo']['loss']
+            rows.append({
+                'sweep': sweep, 'value': v,
+                'valve': out['valve'], 'fifo': out['fifo'],
+                'loss_reduction_pct': (1 - lv / lf) * 100 if lf > 0 else 0.0,
+            })
+            print(f"[eviction] {sweep}={v}: loss valve {lv:.3f} vs fifo "
+                  f"{lf:.3f} (-{rows[-1]['loss_reduction_pct']:.1f}%)",
+                  flush=True)
+
+    reductions = [r['loss_reduction_pct'] for r in rows
+                  if r['fifo']['loss'] > 0.01]
+    result = {'rows': rows, 'reference_thrput': ref,
+              'loss_reduction_range_pct': [min(reductions), max(reductions)]
+              if reductions else None}
+    with open(out_path, 'w') as f:
+        json.dump(result, f, indent=1)
+    if reductions:
+        print(f'throughput-loss reduction vs FIFO: '
+              f'{min(reductions):.1f}%–{max(reductions):.1f}% '
+              f'(paper: 22.9%–40.1%)')
+    return result
+
+
+if __name__ == '__main__':
+    run()

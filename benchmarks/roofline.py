@@ -1,0 +1,106 @@
+"""Deliverable (g): roofline table from the dry-run sweep.
+
+Reads results/dryrun.jsonl (written by repro.launch.dryrun) and renders the
+per-(arch × shape × mesh) three-term roofline with the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS useful ratio, and per-device HBM fit.  Hardware:
+TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+HBM_PER_CHIP = 16e9   # v5e
+
+
+def load(path: str = 'results/dryrun.jsonl') -> List[Dict]:
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (r.get('arch'), r.get('shape'), r.get('mesh'),
+                   r.get('rules_variant', 'default'),
+                   r.get('microbatches', 1))
+            seen[key] = r   # latest record wins
+    return list(seen.values())
+
+
+def table(rows: List[Dict], mesh: str = 'single',
+          variant: str = 'default') -> str:
+    out = [f'| arch | shape | compute_s | memory_s | collective_s | '
+           f'dominant | useful | HBM GB (peak/dev) |',
+           '|---|---|---|---|---|---|---|---|']
+    sel = sorted((r for r in rows
+                  if r.get('mesh') == mesh
+                  and r.get('rules_variant', 'default') == variant),
+                 key=lambda r: (r['arch'], r['shape']))
+    for r in sel:
+        if r.get('status') != 'ok':
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r.get('status')} | — | — |")
+            continue
+        rf = r['roofline']
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4f} | "
+            f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+            f"{rf['dominant']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['hbm']['peak'] / 1e9:.2f} |")
+    return '\n'.join(out)
+
+
+def summarize(rows: List[Dict]) -> Dict:
+    ok = [r for r in rows if r.get('status') == 'ok'
+          and r.get('rules_variant', 'default') == 'default'
+          and r.get('microbatches', 1) == 1]
+    skipped = [r for r in rows if str(r.get('status', '')).startswith('skip')]
+    doms: Dict[str, int] = {}
+    worst = None
+    most_coll = None
+    for r in ok:
+        rf = r['roofline']
+        doms[rf['dominant']] = doms.get(rf['dominant'], 0) + 1
+        terms = [rf['compute_s'], rf['memory_s'], rf['collective_s']]
+        frac = rf['compute_s'] / max(max(terms), 1e-12)
+        if worst is None or frac < worst[0]:
+            worst = (frac, r['arch'], r['shape'], r['mesh'])
+        cshare = rf['collective_s'] / max(sum(terms), 1e-12)
+        if most_coll is None or cshare > most_coll[0]:
+            most_coll = (cshare, r['arch'], r['shape'], r['mesh'])
+    over_hbm = [(r['arch'], r['shape'], r['mesh'],
+                 r['hbm']['peak'] / 1e9) for r in ok
+                if r['hbm']['peak'] > HBM_PER_CHIP]
+    return {'n_ok': len(ok), 'n_skipped': len(skipped),
+            'dominant_counts': doms,
+            'worst_roofline_fraction': worst,
+            'most_collective_bound': most_coll,
+            'cells_over_hbm': over_hbm}
+
+
+def run(out_path: str = 'results/roofline_summary.json') -> Dict:
+    rows = load()
+    s = summarize(rows)
+    with open(out_path, 'w') as f:
+        json.dump(s, f, indent=1, default=str)
+    print(f"dry-run cells ok={s['n_ok']} skipped={s['n_skipped']}")
+    print(f"dominant-term distribution: {s['dominant_counts']}")
+    if s['worst_roofline_fraction']:
+        frac, a, sh, m = s['worst_roofline_fraction']
+        print(f'worst roofline fraction: {a} × {sh} × {m} ({frac:.3f})')
+    if s['most_collective_bound']:
+        c, a, sh, m = s['most_collective_bound']
+        print(f'most collective-bound: {a} × {sh} × {m} '
+              f'({c:.0%} of terms sum)')
+    if s['cells_over_hbm']:
+        print(f"cells exceeding 16 GB/device HBM: {s['cells_over_hbm']}")
+    return s
+
+
+if __name__ == '__main__':
+    run()

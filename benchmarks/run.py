@@ -1,0 +1,65 @@
+"""Benchmark orchestrator — one experiment per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Writes per-benchmark JSON to results/ and prints each table.  The dry-run
+sweep itself (results/dryrun.jsonl) is produced by
+``python -m repro.launch.dryrun --sweep``; benchmarks.roofline consumes it.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+os.makedirs('results', exist_ok=True)
+
+BENCHES = [
+    ('preemption_latency', 'paper §4.1 — serial vs fan-out gate latency'),
+    ('decode_gaps', 'paper Fig. 4 — decode-gap telemetry + T_cool'),
+    ('miad_convergence', 'paper §5 — MIAD reclamation-rate convergence'),
+    ('eviction_policy', 'paper Fig. 11 — Algorithm 1 vs FIFO'),
+    ('colocation_matrix', 'paper Fig. 10 — 10 pairs × 6 strategies'),
+    ('cluster_utilization', 'paper Fig. 8/9 — fleet utilization + savings'),
+    ('roofline', 'deliverable (g) — dry-run roofline table'),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--only', default=None)
+    ap.add_argument('--fast', action='store_true',
+                    help='shorter horizons for CI')
+    args = ap.parse_args()
+
+    failures = []
+    for name, desc in BENCHES:
+        if args.only and name != args.only:
+            continue
+        print(f'\n=== {name}: {desc} ===', flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f'benchmarks.{name}', fromlist=['run'])
+            if args.fast and name == 'colocation_matrix':
+                mod.run(n_pairs=4, horizon_s=150.0)
+            elif args.fast and name == 'eviction_policy':
+                mod.run(horizon_s=150.0)
+            elif args.fast and name == 'miad_convergence':
+                mod.run(horizon_s=150.0)
+            else:
+                mod.run()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f'--- {name} finished in {time.time() - t0:.1f}s', flush=True)
+
+    if failures:
+        print(f'\nFAILED benchmarks: {failures}')
+        sys.exit(1)
+    print('\nall benchmarks complete; JSON in results/')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,92 @@
+"""Quickstart: the Valve colocation runtime in ~60 lines.
+
+Builds a reduced LM, shares one paged KV pool between an ONLINE and an
+OFFLINE engine through the ValveRuntime, and demonstrates the paper's three
+guarantees on a live run:
+
+1. offline compute is gated during online request lifetimes (≤1 preemption
+   per online request, wake after T_cool);
+2. online memory pressure reclaims offline KV pages safely (quarantine
+   remap, no faults, no kills);
+3. invalidated offline requests recompute and finish with IDENTICAL output
+   (greedy decoding is deterministic).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.clock import VirtualClock
+from repro.core.runtime import RuntimeConfig, ValveRuntime
+from repro.models.api import build_model
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.kvpool import KVPool
+
+
+def main():
+    rng = np.random.default_rng(0)
+    cfg = reduced(get_config('qwen3-0.6b'), page_size=4)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    # reservation starts at one 8-page handle: the online burst (9 pages)
+    # overflows it, forcing the compute-first reclamation path
+    pool = KVPool(n_handles=12, pages_per_handle=8, page_size=4,
+                  reserved_handles=1)
+    clock = VirtualClock()
+    offline = None
+
+    rt = ValveRuntime(pool, RuntimeConfig(n_devices=1), clock=clock,
+                      on_invalidate=lambda inv: offline.on_pages_invalidated(inv))
+    online = Engine(model, params, pool,
+                    EngineConfig(max_batch=4, max_seq=64, prefill_chunk=16,
+                                 klass='online'), runtime=rt, clock=clock)
+    offline = Engine(model, params, pool,
+                     EngineConfig(max_batch=4, max_seq=64, prefill_chunk=16,
+                                  klass='offline'), runtime=rt, clock=clock)
+
+    # an offline backlog; run it undisturbed first to get reference outputs
+    prompts = [rng.integers(1, cfg.vocab_size, 12).tolist() for _ in range(3)]
+    refs = {}
+    for p in prompts:
+        rid = offline.submit(p, max_new_tokens=10)
+        refs[rid] = p
+    offline.run_to_completion()
+    reference = {r: offline.output_tokens(r) for r in refs}
+    print(f'offline reference outputs computed '
+          f'({offline.stats.tokens_generated} tokens)')
+
+    # fresh run, now with online interference mid-flight
+    offline2 = Engine(model, params, pool,
+                      EngineConfig(max_batch=4, max_seq=64, prefill_chunk=16,
+                                   klass='offline'), runtime=rt, clock=clock)
+    rt.reclaimer.on_invalidate = offline2.on_pages_invalidated
+    rids = [offline2.submit(p, max_new_tokens=10) for p in prompts]
+    for _ in range(12):
+        offline2.step()
+
+    # online burst arrives: gates close, memory reclaimed from offline
+    print('\n>>> online burst')
+    on_rid = online.submit(rng.integers(1, cfg.vocab_size, 24).tolist(),
+                           max_new_tokens=12)
+    online.run_to_completion()
+    print(f'online finished: {len(online.output_tokens(on_rid))} tokens, '
+          f'preemptions={rt.stats.compute_preemptions}, '
+          f'reclamations={rt.reclaimer.stats.reclamations}, '
+          f'offline requests invalidated={offline2.stats.invalidations}')
+
+    # offline wakes after T_cool and recomputes to the same outputs
+    clock.advance(rt.lifecycle.t_cool + 1e-3)
+    rt.tick()
+    offline2.run_to_completion()
+    ok = all(offline2.output_tokens(r) == reference[r0]
+             for r, r0 in zip(rids, refs))
+    print(f'\noffline recompute exact: {ok}')
+    rt.check_invariants()
+    print('invariants hold: compute-first ordering, ≤1 preemption/request, '
+          'no page faults, no kills')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,63 @@
+"""Architecture registry.
+
+``get_config(arch_id)`` resolves the exact published config; ``ARCHS`` lists the
+ten assigned architectures (``valve-7b`` is the paper's own eval model, used by
+the benchmark suite but not part of the assigned pool).
+"""
+from repro.configs.base import (
+    ModelConfig, ShapeConfig, SHAPES, cell_supported, reduced,
+)
+
+from repro.configs import (
+    seamless_m4t_medium,
+    internlm2_1_8b,
+    command_r_35b,
+    qwen3_14b,
+    qwen3_0_6b,
+    rwkv6_3b,
+    llava_next_mistral_7b,
+    phi3_5_moe,
+    llama4_scout,
+    zamba2_2_7b,
+    valve_7b,
+)
+
+_ALL = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        seamless_m4t_medium, internlm2_1_8b, command_r_35b, qwen3_14b,
+        qwen3_0_6b, rwkv6_3b, llava_next_mistral_7b, phi3_5_moe,
+        llama4_scout, zamba2_2_7b, valve_7b,
+    )
+}
+
+# The ten assigned architectures, in the assignment order.
+ARCHS = [
+    'seamless-m4t-medium',
+    'internlm2-1.8b',
+    'command-r-35b',
+    'qwen3-14b',
+    'qwen3-0.6b',
+    'rwkv6-3b',
+    'llava-next-mistral-7b',
+    'phi3.5-moe-42b-a6.6b',
+    'llama4-scout-17b-a16e',
+    'zamba2-2.7b',
+]
+
+
+def get_config(arch: str) -> ModelConfig:
+    try:
+        return _ALL[arch]
+    except KeyError:
+        raise KeyError(f'unknown arch {arch!r}; known: {sorted(_ALL)}') from None
+
+
+def all_configs():
+    return dict(_ALL)
+
+
+__all__ = [
+    'ModelConfig', 'ShapeConfig', 'SHAPES', 'cell_supported', 'reduced',
+    'ARCHS', 'get_config', 'all_configs',
+]

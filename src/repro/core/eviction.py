@@ -1,0 +1,62 @@
+"""Selective handle reclamation — paper Algorithm 1 (+ FIFO baseline).
+
+The KV cache is not allocated contiguously over memory handles (fragmentation),
+so one handle may hold pages of several offline requests.  Valve greedily
+selects the ``k`` handles with the lowest *marginal token cost*: the total
+extra tokens of requests newly impacted by reclaiming that handle (requests
+already impacted by an earlier pick are free).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, List, Sequence, Set
+
+
+def select_handles(
+    k: int,
+    handles: Sequence[int],
+    reqs_of: Callable[[int], Set[str]],
+    cost: Callable[[str], float],
+) -> List[int]:
+    """Paper Algorithm 1.
+
+    k           — number of handles to reclaim;
+    handles     — candidate handle ids (equal size);
+    reqs_of(h)  — REQS(h): offline requests with ≥1 page in handle h;
+    cost(r)     — COST(r): recompute cost of request r in tokens.
+    """
+    S: List[int] = []
+    chosen: Set[int] = set()
+    E: Set[str] = set()
+    k = min(k, len(handles))
+    for _ in range(k):
+        best, best_cost = None, None
+        for h in handles:
+            if h in chosen:
+                continue
+            c = sum(cost(r) for r in reqs_of(h) if r not in E)
+            if best_cost is None or c < best_cost:
+                best, best_cost = h, c
+        if best is None:
+            break
+        S.append(best)
+        chosen.add(best)
+        E |= reqs_of(best)
+    return S
+
+
+def select_handles_fifo(
+    k: int,
+    handles_by_age: Sequence[int],
+    reqs_of: Callable[[int], Set[str]] = None,
+    cost: Callable[[str], float] = None,
+) -> List[int]:
+    """FIFO baseline (paper §7.2, Fig. 11): evict oldest handles first."""
+    return list(handles_by_age[: k])
+
+
+def impacted_requests(selected: Iterable[int],
+                      reqs_of: Callable[[int], Set[str]]) -> Set[str]:
+    out: Set[str] = set()
+    for h in selected:
+        out |= reqs_of(h)
+    return out

@@ -1,0 +1,131 @@
+"""Page-fault-free sub-layer memory reclamation (paper §5).
+
+The reclamation path, in the paper's mandatory order:
+
+1. **compute first** — offline gates are disabled so no in-flight program can
+   touch pages being reclaimed (the runtime enforces the ordering and this
+   module asserts it);
+2. **select victims** — Algorithm 1 (or FIFO baseline) picks the handles with
+   the lowest marginal token cost;
+3. **remap to quarantine** — every mapped page of a victim handle is remapped
+   to page 0, which is always mapped, so by construction no access can fault;
+4. **surface invalidated IDs** — the per-request invalidated page ids are
+   pushed through a single framework callback (the < 20-LOC patch surface);
+   the framework resets affected requests to *waiting* for recomputation.
+
+A :class:`ReclamationRateLimiter` tracks the reclamation-event rate that the
+MIAD reservation is driving toward the user target.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Sequence
+
+from repro.core import eviction
+from repro.serving.kvpool import KVPool
+
+# type of the framework-side patch surface: called once per reclamation with
+# {offline request id: [invalidated page ids]}
+InvalidationCallback = Callable[[Dict[str, List[int]]], None]
+
+
+@dataclass
+class ReclamationStats:
+    reclamations: int = 0
+    handles_reclaimed: int = 0
+    pages_invalidated: int = 0
+    requests_impacted: int = 0
+    tokens_lost: float = 0.0           # recompute cost surfaced to offline
+    ordering_violations: int = 0       # must stay 0: compute-before-memory
+
+
+class ReclamationRateLimiter:
+    """Sliding-window reclamation-event rate (events/s)."""
+
+    def __init__(self, window_s: float = 60.0):
+        self.window_s = window_s
+        self._events: Deque[float] = deque()
+
+    def note(self, now: float) -> None:
+        self._events.append(now)
+        self._trim(now)
+
+    def _trim(self, now: float) -> None:
+        w = self.window_s
+        while self._events and self._events[0] < now - w:
+            self._events.popleft()
+
+    def rate(self, now: float) -> float:
+        self._trim(now)
+        return len(self._events) / self.window_s
+
+
+class ReclamationController:
+    """Coordinates compute preemption with memory reclamation over one pool.
+
+    ``gate_is_closed`` is a runtime-supplied predicate proving offline compute
+    is already disabled — reclaiming while it returns False is the exact bug
+    class (in-flight kernel touches an unmapped page) the paper's ordering
+    rule exists to prevent, and is recorded as an ordering violation.
+    """
+
+    def __init__(self, pool: KVPool, *,
+                 gate_is_closed: Callable[[], bool],
+                 on_invalidate: Optional[InvalidationCallback] = None,
+                 policy: str = 'valve',
+                 cost_of: Optional[Callable[[str], float]] = None,
+                 rate_window_s: float = 60.0):
+        assert policy in ('valve', 'fifo'), policy
+        self.pool = pool
+        self.gate_is_closed = gate_is_closed
+        self.on_invalidate = on_invalidate
+        self.policy = policy
+        # default COST(r): tokens already materialized = pages × page_size
+        self.cost_of = cost_of or (
+            lambda r: len(pool.pages_of.get(r, ())) * pool.page_size)
+        self.rate = ReclamationRateLimiter(rate_window_s)
+        self.stats = ReclamationStats()
+        self._handle_age: Dict[int, float] = {}
+
+    # ------------------------------------------------------------- victims
+    def select_victims(self, k: int) -> List[int]:
+        cand = self.pool.offline_handles()
+        if self.policy == 'fifo':
+            by_age = sorted(cand, key=lambda h: self._handle_age.get(h, 0.0))
+            return eviction.select_handles_fifo(k, by_age)
+        return eviction.select_handles(
+            k, cand, self.pool.reqs_of_handle, self.cost_of)
+
+    def note_handle_use(self, h: int, now: float) -> None:
+        """FIFO baseline bookkeeping: first-touch age per handle."""
+        self._handle_age.setdefault(h, now)
+
+    # ----------------------------------------------------------- reclaim
+    def reclaim(self, n_handles: int, now: float) -> Dict[str, List[int]]:
+        """Reclaim ``n_handles`` offline handles for online use.
+
+        Returns the invalidation map {offline req: [page ids]} (also pushed
+        through ``on_invalidate``).  Caller must hold the compute gate closed.
+        """
+        if not self.gate_is_closed():
+            self.stats.ordering_violations += 1
+            raise RuntimeError(
+                'reclamation attempted with offline compute enabled '
+                '(paper §5: disable offline compute first)')
+        victims = self.select_victims(n_handles)
+        invalidated = self.pool.reclaim_handles(victims, now)
+        for h in victims:
+            self._handle_age.pop(h, None)
+
+        self.stats.reclamations += 1
+        self.stats.handles_reclaimed += len(victims)
+        self.stats.pages_invalidated += sum(len(v) for v in invalidated.values())
+        self.stats.requests_impacted += len(invalidated)
+        self.stats.tokens_lost += sum(
+            len(v) * self.pool.page_size for v in invalidated.values())
+        self.rate.note(now)
+
+        if self.on_invalidate is not None and invalidated:
+            self.on_invalidate(invalidated)
+        return invalidated

@@ -1,0 +1,197 @@
+"""ValveRuntime — the node-level GPU-colocation-runtime analogue (paper §3–5).
+
+Composes the four mechanisms into the joint bound the paper is named for:
+
+- **preemption latency**: :class:`GateGroup` fan-out flips all device gates in
+  ~O(1); the offline engine's in-flight residual is one sub-layer chunk.
+- **preemption rate**: :class:`OnlineLifecycleTracker` gates offline wake-ups
+  behind ``T_cool`` (≤ 1 compute preemption per online request); MIAD keeps
+  memory-reclamation frequency at the user target.
+- **memory safety**: reclamation goes through :class:`ReclamationController`
+  (compute-first ordering, quarantine remap, invalidated-ID callback).
+
+The runtime is clock-agnostic: a :class:`RealClock` drives the live demo and
+a :class:`VirtualClock` drives the discrete-event simulator, so the paper's
+§7.2 experiments exercise *this* code, not a model of it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.clock import RealClock
+from repro.core.gate import DeviceGate, GateGroup
+from repro.core.lifecycle import OnlineLifecycleTracker
+from repro.core.miad import MIADConfig, MIADReservation
+from repro.core.reclamation import InvalidationCallback, ReclamationController
+from repro.serving.kvpool import KVPool
+
+
+@dataclass
+class RuntimeConfig:
+    n_devices: int = 1
+    gate_mode: str = 'fanout'          # 'fanout' (patched driver) | 'serial'
+    gate_op_latency_s: float = 0.0
+    policy: str = 'valve'              # eviction policy: 'valve' | 'fifo'
+    miad: MIADConfig = field(default_factory=MIADConfig)
+    t_cool_init: float = 0.010
+    # memory mode (paper §7.2 baselines live in core/sim/strategies.py; the
+    # real runtime always runs the paper's OurMem path)
+
+
+@dataclass
+class RuntimeStats:
+    compute_preemptions: int = 0
+    offline_wakeups: int = 0
+    preemption_latencies: List[float] = field(default_factory=list)
+    memory_pressure_events: int = 0
+
+
+class ValveRuntime:
+    """One node: one online engine, ≥0 offline engines, one shared KV pool."""
+
+    def __init__(self, pool: KVPool, cfg: Optional[RuntimeConfig] = None,
+                 *, clock=None,
+                 on_invalidate: Optional[InvalidationCallback] = None):
+        self.cfg = cfg or RuntimeConfig()
+        self.clock = clock or RealClock()
+        self.pool = pool
+        self.gates = GateGroup(
+            [DeviceGate(i, self.cfg.gate_op_latency_s)
+             for i in range(self.cfg.n_devices)],
+            mode=self.cfg.gate_mode)
+        self.lifecycle = OnlineLifecycleTracker(
+            t_cool_init=self.cfg.t_cool_init)
+        import dataclasses
+        miad_cfg = dataclasses.replace(
+            self.cfg.miad, h_max=min(self.cfg.miad.h_max, pool.n_handles))
+        self.miad = MIADReservation(h_init=len(pool.reserved), cfg=miad_cfg)
+        self.reclaimer = ReclamationController(
+            pool,
+            gate_is_closed=lambda: self.gates.all_disabled,
+            on_invalidate=on_invalidate,
+            policy=self.cfg.policy)
+        self.stats = RuntimeStats()
+
+    # ------------------------------------------------------------------
+    # Online engine hooks (the online framework calls these; total patch
+    # surface on the online side is request/iteration notifications).
+    # ------------------------------------------------------------------
+    def on_online_request_start(self, req_id: str) -> None:
+        now = self.clock.now()
+        self.lifecycle.request_start(req_id, now)
+        self._preempt_offline_if_running(now)
+
+    def on_online_request_end(self, req_id: str) -> None:
+        self.lifecycle.request_end(req_id, self.clock.now())
+
+    def on_online_iteration_start(self) -> None:
+        now = self.clock.now()
+        self.lifecycle.iteration_start(now)
+        self._preempt_offline_if_running(now)
+
+    def on_online_iteration_end(self) -> None:
+        self.lifecycle.iteration_end(self.clock.now())
+
+    def _preempt_offline_if_running(self, now: float) -> None:
+        if not self.gates.all_disabled:
+            latency = self.gates.disable_all()
+            self.stats.compute_preemptions += 1
+            self.stats.preemption_latencies.append(latency)
+            self.lifecycle.note_preemption(now)
+
+    # ------------------------------------------------------------------
+    # Memory plane
+    # ------------------------------------------------------------------
+    def alloc_online(self, req_id: str, n_pages: int) -> Optional[List[int]]:
+        """Allocate online KV pages from the MIAD reservation; on shortfall,
+        reclaim offline handles (compute-first) to cover it."""
+        got = self.pool.alloc(req_id, n_pages, klass='online')
+        if got is not None:
+            return got
+        now = self.clock.now()
+        self.stats.memory_pressure_events += 1
+        deficit = n_pages - self.pool.free_pages_for('online')
+        n_handles = -(-deficit // self.pool.pph)  # ceil
+        self._with_gates_closed_reclaim(n_handles, now)
+        return self.pool.alloc(req_id, n_pages, klass='online')
+
+    def free_online(self, req_id: str) -> None:
+        self.pool.free(req_id)
+
+    def alloc_offline(self, req_id: str, n_pages: int) -> Optional[List[int]]:
+        got = self.pool.alloc(req_id, n_pages, klass='offline')
+        if got is not None:
+            now = self.clock.now()
+            for p in got:
+                self.reclaimer.note_handle_use(self.pool.handle_of(p), now)
+        return got
+
+    def free_offline(self, req_id: str) -> None:
+        self.pool.free(req_id)
+
+    def _with_gates_closed_reclaim(self, n_handles: int, now: float
+                                   ) -> Dict[str, List[int]]:
+        """Paper §5 ordering: compute gate closes before any page moves."""
+        was_open = not self.gates.all_disabled
+        if was_open:
+            latency = self.gates.disable_all()
+            self.stats.compute_preemptions += 1
+            self.stats.preemption_latencies.append(latency)
+            self.lifecycle.note_preemption(now)
+        try:
+            inv = self.reclaimer.reclaim(n_handles, now)
+            self.miad.note_reclamation(now)
+            return inv
+        finally:
+            if was_open and self.lifecycle.may_wake_offline(now):
+                self.gates.enable_all()
+
+    # ------------------------------------------------------------------
+    # Periodic tick: MIAD reservation + offline wake-up
+    # ------------------------------------------------------------------
+    def tick(self) -> None:
+        now = self.clock.now()
+        h_target = self.miad.on_tick(now, self.pool.online_used_handles())
+        self._apply_reservation(h_target, now)
+        if self.gates.all_disabled and self.lifecycle.may_wake_offline(now):
+            self.gates.enable_all()
+            self.stats.offline_wakeups += 1
+            self.lifecycle.stats.wakeups += 1
+
+    def _apply_reservation(self, h_target: int, now: float) -> None:
+        """Grow/shrink the pool's reserved-handle set toward MIAD's H."""
+        cur = len(self.pool.reserved)
+        while cur < h_target:
+            empties = self.pool.empty_offline_handles()
+            if empties:
+                self.pool.reserve_handle(empties[0], now)
+            else:
+                # growth must come from offline-held handles → reclamation
+                inv = self._with_gates_closed_reclaim(1, now)
+                if not inv and not self.pool.empty_offline_handles():
+                    break  # nothing reclaimable (pool exhausted by online)
+            cur = len(self.pool.reserved)
+        while cur > h_target:
+            if self.pool.release_reserved_handle() is None:
+                break  # all reserved handles hold online pages
+            cur = len(self.pool.reserved)
+        # sync MIAD's view (pool may have refused to shrink below usage)
+        self.miad.h = max(self.miad.h, len(self.pool.reserved))
+
+    # ------------------------------------------------------------------
+    # Offline engine data plane
+    # ------------------------------------------------------------------
+    def offline_may_dispatch(self) -> bool:
+        return all(g.enabled for g in self.gates.gates)
+
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        self.pool.check_invariants()
+        assert self.reclaimer.stats.ordering_violations == 0
+        # at-most-one compute preemption per online request (paper §4.2)
+        for req, n in self.lifecycle.stats.preempted_requests.items():
+            assert n <= 1, f'request {req} preempted {n}× (> 1)'
+
+    def close(self) -> None:
+        self.gates.close()

@@ -1,0 +1,449 @@
+"""Single-node colocation simulator (paper §7.2).
+
+One GPU resource, one latency-critical ONLINE engine, one throughput
+OFFLINE engine, pluggable compute/memory policies (strategies.py).  The
+simulation is sequential in time (single resource ⇒ no event heap needed):
+the online engine always wins the GPU, paying the strategy's preemption
+delay when offline holds it; offline backfills idle per the strategy's
+wake rule and memory headroom.
+
+Calibration (7B-class model, production-scale numbers the paper quotes):
+prefill ≈ 50 µs/token (32 k prompt → 1.6 s — why layer-level preemption
+stretches to "hundreds of ms"), decode iteration ≈ 30 ms with ≈ 2 ms
+host-side gaps between iterations (paper Fig. 4).
+
+Work conservation: Channel/GPreempt context-save the in-flight offline
+dispatch (it resumes later); KernelPreempt drains it (online eats the full
+residual, offline keeps the work).  Valve invalidations preserve generated
+tokens and requeue a recompute prefill; UVM/StaticMem kills restart the
+request and forfeit its generated tokens.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.sim.strategies import (
+    AllocResult, Channel, ComputePolicy, GPreempt, KernelPreempt,
+    MemoryPolicy, OurMem, Prism, StaticMem, UVM)
+from repro.core.sim.workload import OnlineRequest, WorkloadPair
+
+
+@dataclass
+class SimConfig:
+    total_pages: int = 4096
+    page_tokens: int = 16
+    t_prefill_per_token: float = 50e-6
+    t_decode_iter: float = 0.030
+    t_decode_gap: float = 0.002
+    online_max_batch: int = 32
+    miad_tick: float = 0.25          # MIAD/lifecycle maintenance cadence
+
+
+@dataclass
+class OnlineState:
+    req: OnlineRequest
+    pages: int = 0
+    prefilled: bool = False
+    tokens_done: int = 0
+    t_first: Optional[float] = None
+    t_last: Optional[float] = None
+    stall: float = 0.0               # memory stall paid at admission
+
+
+@dataclass
+class OfflineReq:
+    rid: str
+    prefill_tokens: int              # tokens to (re)compute before decoding
+    out_remaining: int
+    pages: int
+    generated: int = 0
+
+    def __post_init__(self):
+        self.prompt0 = self.prefill_tokens   # original prompt length
+        self.pages0 = self.pages             # full page need (for realloc)
+
+
+@dataclass
+class SimResult:
+    name: str
+    ttft: Dict[str, float] = field(default_factory=dict)
+    tpot: Dict[str, float] = field(default_factory=dict)
+    offline_tokens: float = 0.0
+    offline_tokens_wasted: float = 0.0
+    recompute_tokens: float = 0.0
+    horizon: float = 0.0
+    compute_stats: object = None
+    mem_stats: object = None
+    max_preempt_per_request: int = 0
+
+    @property
+    def offline_throughput(self) -> float:
+        return self.offline_tokens / max(self.horizon, 1e-9)
+
+
+class NodeSim:
+    def __init__(self, pair: WorkloadPair, compute: Optional[ComputePolicy],
+                 memory: MemoryPolicy, cfg: Optional[SimConfig] = None,
+                 *, offline_enabled: bool = True):
+        self.pair = pair
+        self.cp = compute
+        self.mp = memory
+        self.cfg = cfg or SimConfig()
+        self.offline_enabled = offline_enabled
+
+        self.now = 0.0
+        self.arriv = list(pair.online.requests)
+        self.next_arrival = 0
+        self.waiting: List[OnlineState] = []
+        self.active: List[OnlineState] = []
+        self.result = SimResult(pair.name)
+
+        # offline engine
+        self._off_ids = itertools.count()
+        self.off_pending: List[OfflineReq] = []   # needs (re)prefill
+        self.off_running: List[OfflineReq] = []   # decoding
+        self.off_busy_until = 0.0
+        self.off_inflight: Optional[Tuple[str, float, List[OfflineReq]]] = None
+        # ('prefill'|'decode', started_at, targets)
+        self._last_tick = 0.0
+
+    # ------------------------------------------------------------------
+    # Offline bookkeeping
+    # ------------------------------------------------------------------
+    def _off_sizes(self) -> Tuple[int, int]:
+        """(prompt, output) for the next offline request (size mix aware)."""
+        w = self.pair.offline
+        if w.prompt_choices:
+            if not hasattr(self, '_off_rng'):
+                import numpy as np
+                self._off_rng = np.random.default_rng(w.seed)
+            p = int(self._off_rng.choice(w.prompt_choices))
+            o = int(self._off_rng.choice(w.output_choices or
+                                         (w.output_tokens,)))
+            return p, o
+        return w.prompt_tokens, w.output_tokens
+
+    def _off_pages_needed(self, prompt: int, out: int) -> int:
+        return -(-(prompt + out) // self.cfg.page_tokens)
+
+    def _off_admit(self) -> None:
+        """Top up in-flight offline requests while memory allows."""
+        w = self.pair.offline
+        while (len(self.off_running) + len(self.off_pending) < w.max_batch):
+            rid = f'off-{next(self._off_ids)}'
+            prompt, out = self._off_sizes()
+            pages = self._off_pages_needed(prompt, out)
+            if not self.mp.alloc_offline(rid, pages, self.now):
+                break
+            self.off_pending.append(OfflineReq(rid, prompt, out, pages))
+
+    def _off_invalidate(self, res: AllocResult) -> None:
+        """Apply a memory policy's invalidations/kills to the offline engine."""
+        byid = {r.rid: r for r in self.off_pending + self.off_running}
+        for rid in set(res.invalidated) | res.killed:
+            r = byid.get(rid)
+            if r is None:
+                continue
+            if r in self.off_pending:
+                self.off_pending.remove(r)
+            if r in self.off_running:
+                self.off_running.remove(r)
+            if rid in res.killed:
+                # restart from zero: generated work forfeited
+                self.result.offline_tokens -= r.generated
+                self.result.offline_tokens_wasted += r.generated
+                self.mp.free_offline(rid)
+            else:
+                # Valve: tokens kept; recompute prompt+generated, then resume
+                self.result.recompute_tokens += r.prefill_tokens + r.generated
+                r.prefill_tokens = r.prompt0 + r.generated
+                self.mp.free_offline(rid)
+                # re-queue with pages released; re-allocation happens lazily
+                # at the next offline dispatch (an immediate re-grab would
+                # steal the pages the online burst is reclaiming FOR and
+                # thrash the reclaimer)
+                r.pages = 0
+                self.off_pending.insert(0, r)
+        # drop in-flight dispatch targets that vanished
+        if self.off_inflight is not None:
+            kind, t0, targets = self.off_inflight
+            targets = [t for t in targets
+                       if t in self.off_running or t in self.off_pending]
+            self.off_inflight = (kind, t0, targets)
+
+    def _off_start_dispatch(self) -> bool:
+        """Start one offline dispatch at self.now if there is work."""
+        if not self.offline_enabled:
+            return False
+        self._off_admit()
+        # re-alloc pages for recompute victims that failed earlier
+        for r in self.off_pending:
+            if r.pages == 0:
+                if self.mp.alloc_offline(r.rid, r.pages0, self.now):
+                    r.pages = r.pages0
+        ready_pending = [r for r in self.off_pending if r.pages > 0]
+        if ready_pending:
+            r = ready_pending[0]
+            dur = r.prefill_tokens * self.cfg.t_prefill_per_token
+            self.off_inflight = ('prefill', self.now, [r])
+            self.off_busy_until = self.now + dur
+            return True
+        if self.off_running:
+            self.off_inflight = ('decode', self.now, list(self.off_running))
+            self.off_busy_until = self.now + self.cfg.t_decode_iter
+            return True
+        return False
+
+    def _off_complete_dispatch(self) -> None:
+        """Apply the effects of the offline dispatch ending at off_busy_until."""
+        kind, t0, targets = self.off_inflight
+        self.off_inflight = None
+        if kind == 'prefill':
+            if not targets:        # victim invalidated while in flight
+                return
+            r = targets[0]
+            if r in self.off_pending:
+                self.off_pending.remove(r)
+                self.off_running.append(r)
+        else:
+            for r in targets:
+                if r not in self.off_running:
+                    continue
+                r.generated += 1
+                r.out_remaining -= 1
+                self.result.offline_tokens += 1
+                if r.out_remaining <= 0:
+                    self.off_running.remove(r)
+                    self.mp.free_offline(r.rid)
+
+    def _off_preempt(self, online_t: float) -> float:
+        """Online needs the GPU at ``online_t`` while offline is in flight.
+        Returns when online may start."""
+        if self.off_inflight is None or self.off_busy_until <= online_t:
+            if self.off_busy_until > 0 and self.off_inflight is not None \
+                    and self.off_busy_until <= online_t:
+                self._off_complete_dispatch()
+            return online_t
+        remaining = self.off_busy_until - online_t
+        delay = self.cp.preempt_delay(remaining)
+        # only ADMITTED requests experience the preemption (queued requests
+        # aren't executing)
+        active_ids = {s.req.req_id for s in self.active}
+        self.cp.note_preemption(active_ids, delay)
+        if isinstance(self.cp, KernelPreempt):
+            # drain: the offline iteration completes
+            self.off_busy_until = online_t + delay
+            self._off_complete_dispatch()
+        else:
+            # context save: the dispatch's remaining work returns to queue
+            kind, t0, targets = self.off_inflight
+            self.off_inflight = None
+            if kind == 'prefill' and targets:
+                done_frac = max(0.0, (online_t - t0)
+                                / max(self.off_busy_until - t0, 1e-12))
+                r = targets[0]
+                r.prefill_tokens = int(r.prefill_tokens * (1 - done_frac))
+            # decode iteration: tokens not produced; requests stay running
+            self.off_busy_until = online_t + delay
+        return online_t + delay
+
+    # ------------------------------------------------------------------
+    # Online engine
+    # ------------------------------------------------------------------
+    def _pages_for(self, req: OnlineRequest) -> int:
+        return -(-(req.prompt_tokens + req.output_tokens)
+                 // self.cfg.page_tokens)
+
+    def _pump_arrivals(self) -> None:
+        while (self.next_arrival < len(self.arriv)
+               and self.arriv[self.next_arrival].t_arrive <= self.now):
+            req = self.arriv[self.next_arrival]
+            self.next_arrival += 1
+            self.waiting.append(OnlineState(req))
+            # lifecycle start fires at ADMISSION (like the real engine): a
+            # queued-but-unadmitted request produces no GPU activity, and
+            # gating offline on it deadlocks Prism (online waits for memory
+            # offline holds; offline waits for online idle)
+
+    def _admit_online(self) -> None:
+        while self.waiting and len(self.active) < self.cfg.online_max_batch:
+            st = self.waiting[0]
+            res = self.mp.alloc_online(st.req.req_id,
+                                       self._pages_for(st.req), self.now)
+            self._off_invalidate(res)
+            if not res.ok:
+                break                       # head-of-line blocks (Prism)
+            self.now += res.delay           # reclamation/fault stall
+            st.stall += res.delay
+            st.pages = self._pages_for(st.req)
+            self.waiting.pop(0)
+            self.active.append(st)
+            if self.cp:
+                self.cp.on_online_request_start(st.req.req_id, self.now)
+
+    def _finish_online(self, st: OnlineState) -> None:
+        self.active.remove(st)
+        self.mp.free_online(st.req.req_id)
+        if self.cp:
+            self.cp.on_online_request_end(st.req.req_id, self.now)
+        r = st.req
+        self.result.ttft[r.req_id] = st.t_first - r.t_arrive
+        if r.output_tokens > 1:
+            self.result.tpot[r.req_id] = ((st.t_last - st.t_first)
+                                          / (r.output_tokens - 1))
+
+    def _online_dispatch(self) -> bool:
+        """Run one online dispatch; returns True if one ran."""
+        self._pump_arrivals()
+        self._admit_online()
+        needs_prefill = [s for s in self.active if not s.prefilled]
+        decoding = [s for s in self.active if s.prefilled]
+        if not needs_prefill and not decoding:
+            return False
+        start = self._off_preempt(self.now)
+        self.now = start
+        if needs_prefill:
+            st = needs_prefill[0]
+            dur = st.req.prompt_tokens * self.cfg.t_prefill_per_token
+            self.now += dur
+            st.prefilled = True
+            st.tokens_done = 1              # prefill emits the first token
+            st.t_first = st.t_last = self.now
+            if self.cp:
+                self.cp.on_online_iter(start, self.now)
+            if st.req.output_tokens <= 1:
+                self._finish_online(st)
+            return True
+        # decode iteration over the whole batch
+        self.now += self.cfg.t_decode_iter
+        if self.cp:
+            self.cp.on_online_iter(start, self.now)
+        for st in list(decoding):
+            st.tokens_done += 1
+            st.t_last = self.now
+            if st.tokens_done >= st.req.output_tokens:
+                self._finish_online(st)
+        # the inter-iteration gap (paper Fig. 4): immediate-wake policies
+        # inject offline work here — and pay a preemption at the next
+        # iteration; Channel's T_cool (> gap) never fires in a gap
+        if (self.offline_enabled and self.off_inflight is None
+                and self.active and self.cp is not None
+                and self.cp.offline_may_start(self.now)):
+            self._off_start_dispatch()
+        self.now += self.cfg.t_decode_gap
+        return True
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimResult:
+        horizon = self.pair.online.horizon_s
+        guard = 0
+        stall = 0
+        last_now = -1.0
+        while True:
+            guard += 1
+            assert guard < 50_000_000, 'sim did not terminate'
+            # watchdog: if the clock stops advancing (degenerate zero-length
+            # dispatch loops), force a 1 ms step rather than livelock
+            if self.now <= last_now + 1e-12:
+                stall += 1
+                if stall > 20_000:
+                    self.now = last_now + 0.001
+                    stall = 0
+            else:
+                stall = 0
+                last_now = self.now
+            if self.now - self._last_tick >= self.cfg.miad_tick:
+                self._last_tick = self.now
+                self.mp.tick(self.now)
+            ran = self._online_dispatch()
+            if ran:
+                continue
+            done = (self.next_arrival >= len(self.arriv)
+                    and not self.waiting and not self.active)
+            if done and self.now >= horizon:
+                break
+            # idle: complete offline dispatch, backfill, or jump time
+            if self.off_inflight is not None:
+                if self.off_busy_until <= self.now:
+                    self._off_complete_dispatch()
+                    continue
+            next_arr = (self.arriv[self.next_arrival].t_arrive
+                        if self.next_arrival < len(self.arriv) else horizon)
+            if self.offline_enabled and self.off_inflight is None \
+                    and (self.cp is None or self.cp.offline_may_start(self.now)):
+                if self._off_start_dispatch():
+                    # run until the dispatch ends or online work appears
+                    t_next = min(self.off_busy_until, next_arr)
+                    self.now = max(self.now, t_next)
+                    continue
+            if self.off_inflight is not None:
+                # monotonic: a dispatch that ended in the past must not
+                # rewind the clock (it completes on the next loop entry)
+                self.now = max(self.now,
+                               min(self.off_busy_until,
+                                   max(next_arr, self.now)))
+                continue
+            # truly idle: jump to next arrival or wake-check boundary
+            t_jump = next_arr
+            if (self.cp is not None and self.offline_enabled
+                    and not self.cp.offline_may_start(self.now)):
+                t_jump = min(t_jump, self.now + 0.001)  # poll wake boundary
+            if t_jump <= self.now:
+                t_jump = self.now + 0.001
+            self.now = min(t_jump, max(horizon, self.now + 0.001)) \
+                if done else t_jump
+            if done and self.now >= horizon:
+                break
+
+        self.result.horizon = max(self.now, horizon)
+        self.result.compute_stats = self.cp.stats if self.cp else None
+        self.result.mem_stats = self.mp.stats
+        if self.cp:
+            self.result.max_preempt_per_request = max(
+                self.cp.stats.per_request.values(), default=0)
+        return self.result
+
+
+# ---------------------------------------------------------------------------
+# Runners
+# ---------------------------------------------------------------------------
+
+def run_strategy(pair: WorkloadPair, compute_name: str, memory_name: str,
+                 cfg: Optional[SimConfig] = None,
+                 eviction_policy: str = 'valve') -> SimResult:
+    from repro.core.sim import strategies as S
+    cfg = cfg or SimConfig()
+    cp = S.COMPUTE_POLICIES[compute_name]()
+    if memory_name == 'OurMem':
+        mp = OurMem(cfg.total_pages, cfg.page_tokens, policy=eviction_policy)
+    else:
+        mp = S.MEMORY_POLICIES[memory_name](cfg.total_pages, cfg.page_tokens)
+    res = NodeSim(pair, cp, mp, cfg).run()
+    res.name = f'{pair.name}:{compute_name}+{memory_name}'
+    return res
+
+
+def run_online_standalone(pair: WorkloadPair,
+                          cfg: Optional[SimConfig] = None) -> SimResult:
+    """Online alone: full memory, no offline — the TTFT/TPOT baseline."""
+    cfg = cfg or SimConfig()
+    mp = Prism(cfg.total_pages, cfg.page_tokens)
+    res = NodeSim(pair, None, mp, cfg, offline_enabled=False).run()
+    res.name = f'{pair.name}:standalone'
+    return res
+
+
+def run_offline_standalone(pair: WorkloadPair,
+                           cfg: Optional[SimConfig] = None) -> SimResult:
+    """Offline monopolizing the GPU — Thrput_(w,max) for normalization."""
+    cfg = cfg or SimConfig()
+    empty_online = WorkloadPair(
+        pair.name,
+        type(pair.online)(pair.online.name, [], pair.online.horizon_s),
+        pair.offline)
+    mp = Prism(cfg.total_pages, cfg.page_tokens)
+    res = NodeSim(empty_online, None, mp, cfg).run()
+    res.name = f'{pair.name}:offline-max'
+    return res

@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Layout contract with the model code: q (B, Sq, Hq, D), k/v (B, Skv, Hkv, D)
+— same as models.common.attention.  The wrapper flattens heads batch-major
+so the kernel's GQA index maps work, and exposes ``interpret`` for the CPU
+validation sweeps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=(
+    'causal', 'scale', 'block_q', 'block_k', 'interpret'))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    # (B, S, H, D) → (B·H, S, D), heads batch-major so bh // group aligns
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
+    of = flash_attention_bhsd(qf, kf, vf, causal=causal, scale=scale,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return of.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

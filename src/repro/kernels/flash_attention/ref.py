@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: Optional[float] = None):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) → (B, Sq, Hq, D)."""
+    b, sq, hq, d = q.shape
+    skv = k.shape[1]
+    q_pos = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32), (b, sq))
+    kv_pos = jnp.broadcast_to(jnp.arange(skv, dtype=jnp.int32), (b, skv))
+    return cm.attention(q, k, v, q_positions=q_pos, kv_positions=kv_pos,
+                        causal=causal, scale=scale)

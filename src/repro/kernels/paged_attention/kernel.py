@@ -1,0 +1,112 @@
+"""Paged decode-attention Pallas TPU kernel.
+
+One new token per request attends over its KV cache *through the page
+table* — the indirection Valve's quarantine remap rewrites.  The page table
+and per-request lengths ride in scalar-prefetch SMEM
+(PrefetchScalarGridSpec), and the K/V BlockSpec index maps dereference
+``page_table[b, ip]`` to pick the physical page, so the gather never
+materializes in HBM: pages stream HBM→VMEM one (page_size × Dh) tile at a
+time while the online-softmax state sits in VMEM scratch.
+
+Grid ``(B, Hkv, n_pages)``; pages is innermost/sequential.  Tokens past a
+request's length are masked in-kernel; a quarantined page (id 0) streams
+garbage that is either masked (healthy request) or discarded by Valve's
+invalidation-recompute contract — never a fault, by construction.
+
+GQA: q for one (b, kv-head) is the (group, Dh) block of query heads; with
+group ≤ 8 and Dh = 128 the q tile is one MXU pass per page.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(page_table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page_size: int, scale: float):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (pg, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)            # (pg, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = ip * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < lengths_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ip == np_ - 1)
+    def _flush():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_bhgd(q, pool_k, pool_v, page_table, lengths, *,
+                         scale: Optional[float] = None,
+                         interpret: bool = False):
+    """q: (B, Hkv, G, D); pools: (P, pg, Hkv, D) — global paged layout;
+    page_table: (B, maxp) physical ids (0 = quarantine); lengths: (B,)."""
+    b, hkv, g, d = q.shape
+    p_total, pg, _, _ = pool_k.shape
+    maxp = page_table.shape[1]
+    scale = d ** -0.5 if scale is None else scale
+
+    grid = (b, hkv, maxp)
+    kernel = functools.partial(_paged_kernel, page_size=pg, scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda ib, ih, ip, pt, ln: (ib, ih, 0, 0)),
+            # the page-table dereference: physical page for (request, step)
+            pl.BlockSpec((1, pg, 1, d),
+                         lambda ib, ih, ip, pt, ln: (pt[ib, ip], 0, ih, 0)),
+            pl.BlockSpec((1, pg, 1, d),
+                         lambda ib, ih, ip, pt, ln: (pt[ib, ip], 0, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda ib, ih, ip, pt, ln: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=('parallel', 'parallel', 'arbitrary')),
+        interpret=interpret,
+    )(page_table, lengths, q, pool_k, pool_v)
+    return out

@@ -1,0 +1,30 @@
+"""jit'd wrapper: model layout (B, Hq, D) ↔ kernel layout (B, Hkv, G, D)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_bhgd
+
+
+@functools.partial(jax.jit, static_argnames=('scale', 'interpret'))
+def paged_attention(q, pool_k, pool_v, page_table, lengths, *,
+                    scale: Optional[float] = None, interpret: bool = False):
+    """Decode attention through the page table.
+
+    q: (B, Hq, D); pools: (P, pg, Hkv, D); page_table: (B, maxp);
+    lengths: (B,) valid tokens per request.  Matches
+    models.common.paged_attention_ref.
+    """
+    b, hq, d = q.shape
+    hkv = pool_k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    out = paged_attention_bhgd(qg, pool_k, pool_v, page_table,
+                               lengths.astype(jnp.int32), scale=scale,
+                               interpret=interpret)
+    return out.reshape(b, hq, d)

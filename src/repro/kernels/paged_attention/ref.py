@@ -1,0 +1,3 @@
+"""Pure-jnp oracle: models.common.paged_attention_ref (the decode path the
+models execute on CPU)."""
+from repro.models.common import paged_attention_ref  # noqa: F401

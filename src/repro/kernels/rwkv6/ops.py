@@ -1,0 +1,19 @@
+"""jit'd wrapper for the WKV6 kernel (model layout passthrough)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import wkv6_bthk
+
+
+@functools.partial(jax.jit, static_argnames=('chunk', 'interpret'))
+def wkv6(r, k, v, w, u, state, *, chunk: int = 64, interpret: bool = False):
+    """r/k/v/w: (B, T, H, K); u: (H, K); state: (B, H, K, V) f32.
+
+    Matches models.rwkv6.wkv6_ref / wkv6_chunked.
+    """
+    return wkv6_bthk(r, k, v, w, u, state.astype(jnp.float32),
+                     chunk=chunk, interpret=interpret)

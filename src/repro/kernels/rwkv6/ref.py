@@ -1,0 +1,3 @@
+"""Pure-jnp oracles for WKV6: the sequential recurrence and the chunked
+form (both from the model definition — the kernel must match them)."""
+from repro.models.rwkv6 import wkv6_chunked, wkv6_ref  # noqa: F401

@@ -1,0 +1,372 @@
+"""Post-optimization HLO text analysis for roofline accounting.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, so a scan-over-
+layers program under-reports FLOPs/bytes/collectives by ~n_layers×.  This
+module parses the optimized HLO text instead:
+
+- pass 1 splits the module into computations, records every op (kind, result
+  type, operand names) plus a symbol table so operand shapes resolve;
+- pass 2 computes per-computation costs: dot FLOPs (2 × |result| ×
+  contraction), collective payload bytes by kind (+ ring wire factors from
+  replica_groups), and materialized-buffer traffic.  Traffic is
+  **slice-aware**: dynamic-slice/gather charge the region, dynamic-update-
+  slice charges 2× the update, and *fusions* charge each operand by how the
+  fused computation consumes the matching parameter (a parameter only read
+  through dynamic-slice charges the slice — this is what keeps a scan body
+  that slices stacked (L, …) params from counting the full stack every
+  iteration);
+- execution multipliers propagate through the call graph: while bodies
+  multiply by ``known_trip_count``, fusion-called computations are inlined.
+
+Elementwise FLOPs are ignored (standard MFU accounting).  All counts are
+per-device — the compiled module is the per-device SPMD program.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    'f64': 8, 'f32': 4, 'f16': 2, 'bf16': 2, 'f8e4m3fn': 1, 'f8e5m2': 1,
+    's64': 8, 's32': 4, 's16': 2, 's8': 1, 'u64': 8, 'u32': 4, 'u16': 2,
+    'u8': 1, 'pred': 1, 'c64': 8, 'c128': 16, 's4': 1, 'u4': 1,
+}
+
+COLLECTIVE_KINDS = ('all-reduce', 'all-gather', 'reduce-scatter',
+                    'all-to-all', 'collective-permute')
+
+_SHAPE_RE = re.compile(r'(\w+)\[([\d,]*)\]')
+_HEADER_RE = re.compile(
+    r'^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->\s*(.+?)\s*{\s*$')
+# tuple result types may contain /*index=N*/ comments ('=' inside) but never
+# a ')' — match to the first closing paren
+_OP_RE = re.compile(r'^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*'
+                    r'((?:\([^)]*\)|[\w\[\]{},]+))\s+([\w\-]+)\((.*)$')
+_TRIP_RE = re.compile(r'known_trip_count":\{"n":"(\d+)"')
+_GROUPS_LIST_RE = re.compile(r'replica_groups=\{\{([\d,]+)\}')
+_GROUPS_IOTA_RE = re.compile(r'replica_groups=\[(\d+),(\d+)\]')
+_CALLS_RE = re.compile(r'calls=%?([\w.\-]+)')
+_BODY_RE = re.compile(r'body=%?([\w.\-]+)')
+_COND_RE = re.compile(r'condition=%?([\w.\-]+)')
+_APPLY_RE = re.compile(r'to_apply=%?([\w.\-]+)')
+_BRANCH_RE = re.compile(r'branch_computations=\{([^}]*)\}')
+_OPERAND_RE = re.compile(r'%([\w.\-]+)')
+_CONTRACT_RE = re.compile(r'lhs_contracting_dims=\{([\d,]*)\}')
+_PARAM_IDX_RE = re.compile(r'parameter\((\d+)\)')
+
+
+def shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(',') if d]))
+    return out
+
+
+def type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(','))
+    return 2
+
+
+def wire_factor(kind: str, n: int) -> float:
+    """Ring-algorithm wire bytes per payload byte per device."""
+    if n <= 1:
+        return 0.0
+    if kind == 'all-reduce':
+        return 2.0 * (n - 1) / n
+    if kind in ('all-gather', 'reduce-scatter', 'all-to-all'):
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+_FREE_OPS = {'get-tuple-element', 'tuple', 'parameter', 'bitcast',
+             'constant', 'after-all', 'iota', 'partition-id', 'replica-id',
+             # control flow: carries are aliased in place; body ops are
+             # already counted via the call graph
+             'while', 'conditional', 'call'}
+_SLICE_READS = {'dynamic-slice', 'slice', 'gather'}
+
+
+@dataclass
+class Op:
+    kind: str
+    rtype: str
+    operands: List[str]
+    line: str
+    is_root: bool = False
+    is_async_start: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    param_names: List[str] = field(default_factory=list)
+    param_types: List[str] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)
+    ops: List[Op] = field(default_factory=list)
+    # (callee, multiplier, via_fusion)
+    calls: List[Tuple[str, float, bool]] = field(default_factory=list)
+
+
+def _parse_computation(name: str, param_types_str: str, body: List[str]
+                       ) -> Computation:
+    comp = Computation(name)
+    for pm in re.finditer(r'([\w.\-]+):\s*(\([^)]*\)|[\w\[\]{},]+)',
+                          param_types_str):
+        comp.symbols[pm.group(1)] = pm.group(2)
+
+    for line in body:
+        m = _OP_RE.match(line)
+        if not m:
+            # parameter ops have no '(' payload in some printers; catch them
+            pm = re.match(r'^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*'
+                          r'((?:\([^)]*\)|[\w\[\]{},]+))\s+parameter\((\d+)\)',
+                          line)
+            if pm:
+                _, opname, rtype, idx = pm.groups()
+                comp.symbols[opname] = rtype
+                i = int(idx)
+                while len(comp.param_names) <= i:
+                    comp.param_names.append('')
+                    comp.param_types.append('')
+                comp.param_names[i] = opname
+                comp.param_types[i] = rtype
+            continue
+        root, opname, rtype, kind, rest = m.groups()
+        comp.symbols[opname] = rtype
+        if kind == 'parameter':
+            pm2 = _PARAM_IDX_RE.search(line)
+            if pm2:
+                i = int(pm2.group(1))
+                while len(comp.param_names) <= i:
+                    comp.param_names.append('')
+                    comp.param_types.append('')
+                comp.param_names[i] = opname
+                comp.param_types[i] = rtype
+            continue
+        is_start = kind.endswith('-start')
+        base = kind[:-len('-start')] if is_start else kind
+        if base.endswith('-done'):
+            continue
+        operands = _OPERAND_RE.findall(rest.split(')', 1)[0])
+        comp.ops.append(Op(base, rtype, operands, line,
+                           is_root=bool(root), is_async_start=is_start))
+
+        # call graph
+        cm = _CALLS_RE.search(line)
+        if base == 'fusion' and cm:
+            comp.calls.append((cm.group(1), 1.0, True))
+        bm = _BODY_RE.search(line)
+        if base == 'while' and bm:
+            tm = _TRIP_RE.search(line)
+            trip = float(tm.group(1)) if tm else 1.0
+            comp.calls.append((bm.group(1), trip, False))
+            cnd = _COND_RE.search(line)
+            if cnd:
+                comp.calls.append((cnd.group(1), trip, False))
+        am = _APPLY_RE.search(line)
+        if am and base not in COLLECTIVE_KINDS:
+            comp.calls.append((am.group(1), 1.0, True))
+        brm = _BRANCH_RE.search(line)
+        if base == 'conditional' and brm:
+            for b in _OPERAND_RE.findall(brm.group(1)):
+                comp.calls.append((b, 1.0, False))
+        if base == 'call' and cm:
+            comp.calls.append((cm.group(1), 1.0, False))
+    return comp
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    lines = hlo_text.splitlines()
+    i = 0
+    entry: Optional[str] = None
+    while i < len(lines):
+        m = _HEADER_RE.match(lines[i])
+        if not m:
+            i += 1
+            continue
+        is_entry, name, params, _ret = m.groups()
+        body = []
+        i += 1
+        while i < len(lines) and not lines[i].startswith('}'):
+            body.append(lines[i])
+            i += 1
+        comp = _parse_computation(name, params, body)
+        comps[comp.name] = comp
+        if is_entry:
+            entry = name
+    return comps, entry
+
+
+# ---------------------------------------------------------------------------
+# Cost pass
+# ---------------------------------------------------------------------------
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    cdm = _CONTRACT_RE.search(op.line)
+    lhs_t = comp.symbols.get(op.operands[0]) if op.operands else None
+    contract = 1
+    if cdm and lhs_t:
+        lhs_dims = shape_dims(lhs_t)
+        if lhs_dims:
+            dims = lhs_dims[0][1]
+            for di in cdm.group(1).split(','):
+                if di and int(di) < len(dims):
+                    contract *= dims[int(di)]
+    n_out = 1
+    for _, dims in shape_dims(op.rtype):
+        for d in dims:
+            n_out *= d
+    return 2.0 * n_out * contract
+
+
+def _fusion_param_charges(fused: Computation) -> Tuple[List[Optional[float]],
+                                                       float]:
+    """Per-parameter read charge for a fused computation.
+
+    Returns (charges, extra_write): charges[i] is bytes to charge for
+    operand i (None → full operand bytes); extra_write adjusts the result
+    charge (DUS root writes only the update region).
+    """
+    uses: Dict[str, List[Op]] = defaultdict(list)
+    for op in fused.ops:
+        for o in op.operands:
+            uses[o].append(op)
+    charges: List[Optional[float]] = []
+    root = next((op for op in fused.ops if op.is_root),
+                fused.ops[-1] if fused.ops else None)
+    for pname, ptype in zip(fused.param_names, fused.param_types):
+        if not pname:
+            charges.append(None)
+            continue
+        consumers = uses.get(pname, [])
+        if not consumers:
+            charges.append(0.0)
+            continue
+        full = float(type_bytes(ptype))
+        charge = 0.0
+        sliced = True
+        for c in consumers:
+            if c.kind in _SLICE_READS:
+                charge += type_bytes(c.rtype)
+            elif (c.kind == 'dynamic-update-slice' and c.operands
+                  and c.operands[0] == pname):
+                continue  # aliased in-place destination: no read
+            else:
+                sliced = False
+                break
+        charges.append(min(charge, full) if sliced else None)
+    extra_write = 0.0
+    if root is not None and root.kind == 'dynamic-update-slice':
+        upd_t = (fused.symbols.get(root.operands[1])
+                 if len(root.operands) > 1 else None)
+        if upd_t:
+            # charge update region instead of the full result buffer
+            extra_write = float(type_bytes(upd_t)) - float(type_bytes(root.rtype))
+    return charges, extra_write
+
+
+def _op_traffic(op: Op, comp: Computation,
+                comps: Dict[str, Computation]) -> float:
+    res = float(type_bytes(op.rtype))
+    if op.kind in _SLICE_READS:
+        return 2.0 * res
+    if op.kind in ('dynamic-update-slice', 'scatter'):
+        upd = comp.symbols.get(op.operands[1]) if len(op.operands) > 1 else None
+        return 2.0 * (type_bytes(upd) if upd else res)
+    if op.kind == 'fusion':
+        cm = _CALLS_RE.search(op.line)
+        fused = comps.get(cm.group(1)) if cm else None
+        if fused is not None and fused.param_names:
+            charges, extra_write = _fusion_param_charges(fused)
+            b = max(res + extra_write, 0.0)
+            for i, oname in enumerate(op.operands):
+                t = comp.symbols.get(oname)
+                full = float(type_bytes(t)) if t else 0.0
+                if i < len(charges) and charges[i] is not None:
+                    b += min(charges[i], full)
+                else:
+                    b += full
+            return b
+    b = res
+    for oname in op.operands:
+        t = comp.symbols.get(oname)
+        if t:
+            b += type_bytes(t)
+    return b
+
+
+@dataclass
+class ModuleCosts:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    coll_payload: Dict[str, float] = field(default_factory=dict)
+    coll_wire: float = 0.0
+    coll_count: float = 0.0
+
+
+def analyze(hlo_text: str) -> ModuleCosts:
+    comps, entry = parse_module(hlo_text)
+    out = ModuleCosts()
+    if entry is None:
+        return out
+
+    mult: Dict[str, float] = defaultdict(float)
+    fusion_ctx: Dict[str, bool] = defaultdict(lambda: False)
+
+    def visit(name: str, m: float, via_fusion: bool):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        mult[name] += m
+        if via_fusion:
+            fusion_ctx[name] = True
+        for callee, k, fus in comp.calls:
+            visit(callee, m * k, via_fusion or fus)
+
+    visit(entry, 1.0, False)
+
+    for name, m in mult.items():
+        comp = comps[name]
+        if fusion_ctx[name]:
+            # inlined into a fusion: dots inside fusions still execute
+            for op in comp.ops:
+                if op.kind == 'dot':
+                    out.flops += m * _dot_flops(op, comp)
+            continue
+        for op in comp.ops:
+            if op.kind == 'dot':
+                out.flops += m * _dot_flops(op, comp)
+            elif op.kind == 'convolution':
+                out.flops += m * 2.0 * type_bytes(op.rtype)
+            if op.kind in COLLECTIVE_KINDS:
+                payload = type_bytes(op.rtype)
+                if op.is_async_start and op.rtype.startswith('('):
+                    payload //= 2
+                n = _group_size(op.line)
+                out.coll_payload[op.kind] = (
+                    out.coll_payload.get(op.kind, 0.0) + m * payload)
+                out.coll_wire += m * payload * wire_factor(op.kind, n)
+                out.coll_count += m
+            if op.kind not in _FREE_OPS:
+                out.traffic_bytes += m * _op_traffic(op, comp, comps)
+    return out

@@ -1,0 +1,115 @@
+"""Live online-offline colocation driver (one node).
+
+An ONLINE engine (latency-critical, bursty arrivals) and an OFFLINE engine
+(throughput batch work) share one KV pool through the ValveRuntime:
+
+- online activity closes the offline compute gates (≤ 1 preemption per
+  online request, wake after T_cool);
+- online memory pressure reclaims offline handles (compute-first, quarantine
+  remap, the < 20-LOC invalidation callback resets offline requests);
+- MIAD keeps the online reservation tracking demand.
+
+Reports TTFT / TPOT for online and tokens/s for offline — the same metrics
+the paper's Fig. 10 uses; benchmarks/colocation_matrix.py runs the full
+strategy grid in simulation.
+
+    PYTHONPATH=src python -m repro.launch.serve --steps 400
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.core.clock import RealClock
+from repro.core.runtime import RuntimeConfig, ValveRuntime
+from repro.models.api import build_model
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.kvpool import KVPool
+
+
+def serve_demo(*, arch: str = 'qwen3-0.6b', steps: int = 400,
+               online_rate: float = 0.08, burst_every: int = 120,
+               seed: int = 0, clock=None, quiet: bool = False):
+    """Drive both engines for ``steps`` scheduler ticks; returns metrics."""
+    rng = np.random.default_rng(seed)
+    cfg = reduce_cfg(get_config(arch), page_size=4)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+
+    pool = KVPool(n_handles=24, pages_per_handle=8, page_size=4,
+                  reserved_handles=2)
+    clock = clock or RealClock()
+    online_eng: Optional[Engine] = None
+    offline_eng: Optional[Engine] = None
+
+    def on_invalidate(inv):
+        offline_eng.on_pages_invalidated(inv)
+
+    rt = ValveRuntime(pool, RuntimeConfig(n_devices=1, t_cool_init=0.002),
+                      clock=clock, on_invalidate=on_invalidate)
+    online_eng = Engine(model, params,
+                        pool, EngineConfig(max_batch=8, max_seq=96,
+                                           prefill_chunk=16, klass='online'),
+                        runtime=rt, clock=clock)
+    offline_eng = Engine(model, params,
+                         pool, EngineConfig(max_batch=8, max_seq=96,
+                                            prefill_chunk=16,
+                                            klass='offline'),
+                         runtime=rt, clock=clock)
+
+    # offline backlog: long prompts, long generations
+    for _ in range(12):
+        offline_eng.submit(rng.integers(1, cfg.vocab_size, 24).tolist(),
+                           max_new_tokens=24)
+
+    for t in range(steps):
+        # bursty online arrivals: poisson background + periodic spike
+        n_new = rng.poisson(online_rate) + (3 if t % burst_every == 0 else 0)
+        for _ in range(n_new):
+            online_eng.submit(rng.integers(1, cfg.vocab_size, 12).tolist(),
+                              max_new_tokens=8)
+        if online_eng.queue or online_eng.running:
+            online_eng.step()
+        else:
+            offline_eng.step()
+        rt.tick()
+
+    rt.check_invariants()
+    on_fin = online_eng.finished
+    off_fin = offline_eng.finished
+    ttfts = [r.ttft for r in on_fin if r.ttft is not None]
+    tpots = [r.tpot for r in on_fin if r.tpot and r.tpot > 0]
+    metrics = {
+        'online_finished': len(on_fin),
+        'offline_finished': len(off_fin),
+        'online_ttft_p50': float(np.median(ttfts)) if ttfts else None,
+        'online_tpot_p50': float(np.median(tpots)) if tpots else None,
+        'offline_tokens': offline_eng.stats.tokens_generated,
+        'offline_recomputed_tokens': offline_eng.stats.tokens_recomputed,
+        'compute_preemptions': rt.stats.compute_preemptions,
+        'offline_wakeups': rt.stats.offline_wakeups,
+        'reclamations': rt.reclaimer.stats.reclamations,
+        'max_preemptions_per_request': max(
+            rt.lifecycle.stats.preempted_requests.values(), default=0),
+    }
+    if not quiet:
+        for k, v in metrics.items():
+            print(f'  {k}: {v}')
+    return metrics
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch', default='qwen3-0.6b')
+    ap.add_argument('--steps', type=int, default=400)
+    ap.add_argument('--seed', type=int, default=0)
+    args = ap.parse_args()
+    serve_demo(arch=args.arch, steps=args.steps, seed=args.seed)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,332 @@
+"""Decoder-only dense transformer (internlm2, command-r, qwen3-14b/0.6b,
+llava-next backbone, valve-7b).
+
+Three execution paths share one layer definition:
+- ``forward_train``: full causal self-attention, scan-over-layers + remat,
+  chunked CE loss (logits never materialize at (B, S, V)).
+- ``prefill``: causal self-attention over the prompt, K/V written into the
+  paged pool through the page table.
+- ``decode_step``: one token per request, paged-attention read path (the
+  tensors Valve's reclamation remaps live here).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import common as cm
+from repro.models.common import PSpec
+
+
+# ---------------------------------------------------------------------------
+# Template
+# ---------------------------------------------------------------------------
+
+def attn_template(cfg: ModelConfig, L: int, d_in: Optional[int] = None,
+                  heads: Optional[int] = None, head_dim: Optional[int] = None,
+                  kv_heads: Optional[int] = None) -> Dict[str, PSpec]:
+    d = d_in if d_in is not None else cfg.d_model
+    h = heads if heads is not None else cfg.n_heads
+    hkv = kv_heads if kv_heads is not None else cfg.n_kv_heads
+    hd = head_dim if head_dim is not None else cfg.hd
+    t = {
+        'wq': PSpec((L, d, h * hd), ('layers', 'embed', 'qkv')),
+        'wk': PSpec((L, d, hkv * hd), ('layers', 'embed', 'qkv')),
+        'wv': PSpec((L, d, hkv * hd), ('layers', 'embed', 'qkv')),
+        'wo': PSpec((L, h * hd, cfg.d_model), ('layers', 'qkv', 'embed')),
+    }
+    if cfg.attn_bias:
+        t['bq'] = PSpec((L, h * hd), ('layers', 'qkv'), 'zeros')
+        t['bk'] = PSpec((L, hkv * hd), ('layers', 'qkv'), 'zeros')
+        t['bv'] = PSpec((L, hkv * hd), ('layers', 'qkv'), 'zeros')
+    if cfg.qk_norm:
+        t['q_norm'] = PSpec((L, hd), ('layers', 'head_dim'), 'ones')
+        t['k_norm'] = PSpec((L, hd), ('layers', 'head_dim'), 'ones')
+    return t
+
+
+def mlp_template(cfg: ModelConfig, L: int) -> Dict[str, PSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        'wg': PSpec((L, d, f), ('layers', 'embed', 'ffn')),
+        'wu': PSpec((L, d, f), ('layers', 'embed', 'ffn')),
+        'wd': PSpec((L, f, d), ('layers', 'ffn', 'embed')),
+    }
+
+
+def template(cfg: ModelConfig) -> Dict[str, Any]:
+    L, d, v = cfg.n_layers, cfg.d_model, cfg.vocab_size
+    t: Dict[str, Any] = {
+        'embed': PSpec((v, d), ('vocab', 'embed'), scale=d ** -0.5),  # tied-unembed-safe: logits ~O(1)
+        'final_norm': PSpec((d,), ('embed',), 'ones'),
+        'layers': {
+            'ln1': PSpec((L, d), ('layers', 'embed'), 'ones'),
+            'ln2': PSpec((L, d), ('layers', 'embed'), 'ones'),
+            **attn_template(cfg, L),
+            **mlp_template(cfg, L),
+        },
+    }
+    if not cfg.tie_embeddings:
+        t['unembed'] = PSpec((d, v), ('embed', 'vocab'))
+    return t
+
+
+def unembed_of(cfg: ModelConfig, params):
+    return params['embed'].T if cfg.tie_embeddings else params['unembed']
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def qkv_proj(cfg: ModelConfig, lp, x, positions, *, heads=None, head_dim=None,
+             kv_heads=None, rope_theta=None, use_rope=True):
+    b, s, _ = x.shape
+    h = heads if heads is not None else cfg.n_heads
+    hd = head_dim if head_dim is not None else cfg.hd
+    hkv = kv_heads if kv_heads is not None else cfg.n_kv_heads
+    q = x @ lp['wq']
+    k = x @ lp['wk']
+    v = x @ lp['wv']
+    if cfg.attn_bias and 'bq' in lp:
+        q, k, v = q + lp['bq'], k + lp['bk'], v + lp['bv']
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    q = constrain(q, ('batch', 'seq', 'heads', 'head_dim'))
+    k = constrain(k, ('batch', 'seq', 'kv_heads', 'head_dim'))
+    v = constrain(v, ('batch', 'seq', 'kv_heads', 'head_dim'))
+    if cfg.qk_norm and 'q_norm' in lp:
+        q = cm.rms_norm(q, lp['q_norm'], cfg.norm_eps)
+        k = cm.rms_norm(k, lp['k_norm'], cfg.norm_eps)
+    if use_rope:
+        theta = rope_theta if rope_theta is not None else cfg.rope_theta
+        q = cm.rope(q, positions, theta)
+        k = cm.rope(k, positions, theta)
+    return q, k, v
+
+
+def self_attn_train(cfg: ModelConfig, lp, x, positions):
+    q, k, v = qkv_proj(cfg, lp, x, positions)
+    out = cm.chunked_attention(q, k, v, q_positions=positions,
+                               kv_positions=positions, causal=True)
+    b, s, _, _ = out.shape
+    out = out.reshape(b, s, -1)
+    out = constrain(out, ('batch', 'seq', 'qkv'))
+    return out @ lp['wo']
+
+
+def self_attn_prefill(cfg: ModelConfig, lp, x, positions, pool_k, pool_v,
+                      page_table, *, use_pallas: bool = False):
+    q, k, v = qkv_proj(cfg, lp, x, positions)
+    pool_k = cm.kv_write_prefill(pool_k, page_table, k)
+    pool_v = cm.kv_write_prefill(pool_v, page_table, v)
+    if use_pallas:
+        # serving hot spot: flash kernel keeps scores in VMEM (no grad
+        # needed on the prefill path); interpret=True validates on CPU
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=True,
+                              block_q=min(128, q.shape[1]),
+                              block_k=min(128, k.shape[1]),
+                              interpret=jax.default_backend() == 'cpu')
+    else:
+        out = cm.chunked_attention(q, k, v, q_positions=positions,
+                                   kv_positions=positions, causal=True)
+    b, s, _, _ = out.shape
+    out = out.reshape(b, s, -1)
+    out = constrain(out, ('batch', 'seq', 'qkv'))
+    return out @ lp['wo'], pool_k, pool_v
+
+
+def self_attn_decode(cfg: ModelConfig, lp, x, positions, pool_k, pool_v,
+                     page_table):
+    """x: (B, 1, D); positions: (B,) index of the new token."""
+    b = x.shape[0]
+    pg = pool_k.shape[-3]   # page size (layout-agnostic: global 4-D / region 5-D)
+    q, k, v = qkv_proj(cfg, lp, x, positions[:, None])
+    page_idx = jnp.take_along_axis(
+        page_table, (positions // pg)[:, None], axis=1)[:, 0]
+    offs = positions % pg
+    pool_k = cm.kv_write_token(pool_k, page_idx, offs, k[:, 0])
+    pool_v = cm.kv_write_token(pool_v, page_idx, offs, v[:, 0])
+    out = cm.paged_attention_ref(q[:, 0], pool_k, pool_v, page_table,
+                                 positions + 1)
+    out = out.reshape(b, 1, -1)
+    out = constrain(out, ('batch', 'seq', 'qkv'))
+    return out @ lp['wo'], pool_k, pool_v
+
+
+def layer_apply(cfg: ModelConfig, lp, h, positions, mode: str,
+                cache_l: Optional[Dict[str, jax.Array]] = None,
+                page_table=None, use_pallas: bool = False):
+    x = cm.rms_norm(h, lp['ln1'], cfg.norm_eps)
+    new_cache_l = cache_l
+    if mode == 'train':
+        attn_out = self_attn_train(cfg, lp, x, positions)
+    elif mode == 'prefill':
+        attn_out, pk, pv = self_attn_prefill(
+            cfg, lp, x, positions, cache_l['k'], cache_l['v'], page_table,
+            use_pallas=use_pallas)
+        new_cache_l = {'k': pk, 'v': pv}
+    elif mode == 'decode':
+        attn_out, pk, pv = self_attn_decode(
+            cfg, lp, x, positions, cache_l['k'], cache_l['v'], page_table)
+        new_cache_l = {'k': pk, 'v': pv}
+    else:
+        raise ValueError(mode)
+    h = h + attn_out
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    x = cm.rms_norm(h, lp['ln2'], cfg.norm_eps)
+    h = h + cm.swiglu(x, lp['wg'], lp['wu'], lp['wd'])
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    return h, new_cache_l
+
+
+def scan_layers(cfg: ModelConfig, layers, h, positions, mode: str,
+                cache=None, page_table=None, remat: bool = True,
+                use_pallas: bool = False):
+    def body(carry, xs):
+        lp, cache_l = xs
+        out, new_cache_l = layer_apply(cfg, lp, carry, positions, mode,
+                                       cache_l, page_table,
+                                       use_pallas=use_pallas)
+        return out, new_cache_l
+
+    if remat and mode == 'train':
+        body = jax.checkpoint(body)
+    h, new_cache = jax.lax.scan(body, h, (layers, cache))
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params, tokens, prefix_embeds=None):
+    h = params['embed'][tokens]
+    if prefix_embeds is not None:
+        p = prefix_embeds.shape[1]
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h[:, p:]], axis=1)
+    return constrain(h, ('batch', 'seq', 'embed'))
+
+
+def forward_train(cfg: ModelConfig, params, batch, *, remat: bool = True):
+    tokens = batch['tokens']
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = embed_inputs(cfg, params, tokens, batch.get('prefix_embeds'))
+    h, _ = scan_layers(cfg, params['layers'], h, positions, 'train',
+                       cache=None, remat=remat)
+    nll, cnt = cm.chunked_ce_loss(
+        h, params['final_norm'], unembed_of(cfg, params),
+        batch['labels'], mask=batch.get('loss_mask'), eps=cfg.norm_eps)
+    return nll / jnp.maximum(cnt, 1.0), {'tokens': cnt}
+
+
+def prefill(cfg: ModelConfig, params, cache, batch, *,
+            use_pallas: bool = False):
+    tokens = batch['tokens']
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = embed_inputs(cfg, params, tokens, batch.get('prefix_embeds'))
+    h, cache = scan_layers(cfg, params['layers'], h, positions, 'prefill',
+                           cache=cache, page_table=batch['page_table'],
+                           remat=False, use_pallas=use_pallas)
+    last = cm.rms_norm(h[:, -1], params['final_norm'], cfg.norm_eps)
+    logits = last @ unembed_of(cfg, params)
+    return cache, constrain(logits, ('batch', 'vocab'))
+
+
+def self_attn_prefill_chunk(cfg: ModelConfig, lp, x, positions, pool_k, pool_v,
+                            page_table, page_ids, offsets, kv_len):
+    """One prefill *chunk* with past-KV readback.
+
+    x: (B, C, D) chunk hidden; positions: (B, C) absolute positions
+    (padding repeats the last real position); page_ids/offsets: (B, C)
+    per-token write targets (padding → quarantine page 0); kv_len: (B,)
+    total valid tokens after this chunk.
+    """
+    q, k, v = qkv_proj(cfg, lp, x, positions)
+    pool_k = cm.kv_write_tokens(pool_k, page_ids, offsets, k)
+    pool_v = cm.kv_write_tokens(pool_v, page_ids, offsets, v)
+    kg = cm.kv_gather(pool_k, page_table)    # (B, maxp*pg, Hkv, Dh)
+    vg = cm.kv_gather(pool_v, page_table)
+    b, skv = kg.shape[:2]
+    kv_pos = jnp.broadcast_to(jnp.arange(skv, dtype=jnp.int32), (b, skv))
+    valid = kv_pos < kv_len[:, None]
+    out = cm.attention(q, kg, vg, q_positions=positions, kv_positions=kv_pos,
+                       kv_valid=valid, causal=True)
+    c = x.shape[1]
+    out = out.reshape(b, c, -1)
+    out = constrain(out, ('batch', 'seq', 'qkv'))
+    return out @ lp['wo'], pool_k, pool_v
+
+
+def prefill_chunk(cfg: ModelConfig, params, cache, batch):
+    """Chunked prefill step (the offline engine's preemptible dispatch unit).
+
+    batch: tokens (B, C), positions (B, C), page_table (B, maxp),
+    page_ids/offsets (B, C), kv_len (B,), last_idx (B,) index of the last
+    real token inside the chunk.  Returns (cache, logits at last_idx).
+    """
+    tokens = batch['tokens']
+    positions = batch['positions']
+    h = embed_inputs(cfg, params, tokens, batch.get('prefix_embeds'))
+
+    def body(carry, xs):
+        lp, cache_l = xs
+        x = cm.rms_norm(carry, lp['ln1'], cfg.norm_eps)
+        attn_out, pk, pv = self_attn_prefill_chunk(
+            cfg, lp, x, positions, cache_l['k'], cache_l['v'],
+            batch['page_table'], batch['page_ids'], batch['offsets'],
+            batch['kv_len'])
+        hh = carry + attn_out
+        x = cm.rms_norm(hh, lp['ln2'], cfg.norm_eps)
+        hh = hh + cm.swiglu(x, lp['wg'], lp['wu'], lp['wd'])
+        return hh, {'k': pk, 'v': pv}
+
+    h, cache = jax.lax.scan(body, h, (params['layers'], cache))
+    last = jnp.take_along_axis(h, batch['last_idx'][:, None, None], axis=1)[:, 0]
+    last = cm.rms_norm(last, params['final_norm'], cfg.norm_eps)
+    logits = last @ unembed_of(cfg, params)
+    return cache, constrain(logits, ('batch', 'vocab'))
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch):
+    tokens = batch['tokens']            # (B,)
+    positions = batch['positions']      # (B,) index of the new token
+    h = params['embed'][tokens][:, None, :]
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    h, cache = scan_layers(cfg, params['layers'], h, positions, 'decode',
+                           cache=cache, page_table=batch['page_table'],
+                           remat=False)
+    last = cm.rms_norm(h[:, 0], params['final_norm'], cfg.norm_eps)
+    logits = last @ unembed_of(cfg, params)
+    return cache, constrain(logits, ('batch', 'vocab'))
+
+
+# ---------------------------------------------------------------------------
+# Cache template
+# ---------------------------------------------------------------------------
+
+def cache_template(cfg: ModelConfig, n_pages: int,
+                   batch: Optional[int] = None) -> Dict[str, PSpec]:
+    """Paged KV pool.
+
+    ``batch=None`` → global pool (P, pg, Hkv, Dh) per layer: the engine layout
+    Valve's handles/quarantine operate on (page 0 = quarantine).
+    ``batch=B`` → per-request region layout (B, R, pg, Hkv, Dh): the
+    SPMD-clean distributed layout (region slot 0 = quarantine).
+    """
+    if batch is None:
+        shape = (cfg.n_layers, n_pages, cfg.page_size, cfg.n_kv_heads, cfg.hd)
+        axes = ('layers', 'pages', None, 'kv_heads', 'head_dim')
+    else:
+        shape = (cfg.n_layers, batch, n_pages, cfg.page_size,
+                 cfg.n_kv_heads, cfg.hd)
+        axes = ('layers', 'batch', 'pages', None, 'kv_heads', 'head_dim')
+    return {'k': PSpec(shape, axes, 'zeros'), 'v': PSpec(shape, axes, 'zeros')}

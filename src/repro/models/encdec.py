@@ -1,0 +1,221 @@
+"""seamless-m4t-medium — speech-encoder → text-decoder transformer.
+
+[audio] frontend is a STUB by instruction: inputs are precomputed speech frame
+embeddings (B, S_enc, d_model).  The decoder is a standard causal transformer
+with cross-attention; decoder self-attn KV is paged (Valve-reclaimable), the
+cross-attention K/V (computed once from encoder output at prefill) is a dense
+per-request cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import common as cm
+from repro.models import dense
+from repro.models.common import PSpec
+
+# Encoder context for decode shapes; prefill_32k = 32k encoder frames +
+# seq/8 decoder prefix (documented in DESIGN.md — the shape grid is LM-centric).
+DEC_PREFIX_FRACTION = 8
+
+
+def template(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    Le, Ld = cfg.enc_layers, cfg.dec_layers
+    t: Dict[str, Any] = {
+        'embed': PSpec((v, d), ('vocab', 'embed'), scale=d ** -0.5),  # tied-unembed-safe: logits ~O(1)
+        'unembed': PSpec((d, v), ('embed', 'vocab')),
+        'frontend_proj': PSpec((d, d), ('embed', 'embed')),  # audio-stub adapter
+        'enc_final_norm': PSpec((d,), ('embed',), 'ones'),
+        'final_norm': PSpec((d,), ('embed',), 'ones'),
+        'enc_layers': {
+            'ln1': PSpec((Le, d), ('layers', 'embed'), 'ones'),
+            'ln2': PSpec((Le, d), ('layers', 'embed'), 'ones'),
+            **dense.attn_template(cfg, Le),
+            **dense.mlp_template(cfg, Le),
+        },
+        'dec_layers': {
+            'ln1': PSpec((Ld, d), ('layers', 'embed'), 'ones'),
+            'ln2': PSpec((Ld, d), ('layers', 'embed'), 'ones'),
+            'ln_cross': PSpec((Ld, d), ('layers', 'embed'), 'ones'),
+            **dense.attn_template(cfg, Ld),
+            **{f'x{k}': s for k, s in dense.attn_template(cfg, Ld).items()},
+            **dense.mlp_template(cfg, Ld),
+        },
+    }
+    return t
+
+
+def _xlp(lp):
+    """Cross-attention param view (keys prefixed with 'x')."""
+    return {k[1:]: v for k, v in lp.items() if k.startswith('x')}
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: (B, S_enc, D) stub embeddings → encoder output (B, S_enc, D)."""
+    b, s, _ = frames.shape
+    h = frames.astype(cm.DEFAULT_DTYPE) @ params['frontend_proj']
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(hh, lp):
+        x = cm.rms_norm(hh, lp['ln1'], cfg.norm_eps)
+        q, k, v = dense.qkv_proj(cfg, lp, x, positions)
+        out = cm.chunked_attention(q, k, v, q_positions=positions,
+                                   kv_positions=positions, causal=False)
+        out = out.reshape(b, s, -1)
+        out = constrain(out, ('batch', 'seq', 'qkv'))
+        hh = hh + out @ lp['wo']
+        hh = constrain(hh, ('batch', 'seq', 'embed'))
+        x = cm.rms_norm(hh, lp['ln2'], cfg.norm_eps)
+        hh = hh + cm.swiglu(x, lp['wg'], lp['wu'], lp['wd'])
+        return constrain(hh, ('batch', 'seq', 'embed')), None
+
+    h, _ = jax.lax.scan(body, h, params['enc_layers'])
+    return cm.rms_norm(h, params['enc_final_norm'], cfg.norm_eps)
+
+
+def cross_kv(cfg: ModelConfig, params, enc_out):
+    """Precompute cross-attention K/V for every decoder layer.
+
+    → k, v: (Ld, B, S_enc, Hkv, Dh)."""
+    b, s, _ = enc_out.shape
+
+    def body(_, lp):
+        xlp = _xlp(lp)
+        k = (enc_out @ xlp['wk'])
+        v = (enc_out @ xlp['wv'])
+        if cfg.attn_bias and 'bk' in xlp:
+            k, v = k + xlp['bk'], v + xlp['bv']
+        k = k.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+        v = v.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, None, params['dec_layers'])
+    return ks, vs
+
+
+def _cross_attn(cfg, lp, x, positions, xk, xv):
+    b, t, _ = x.shape
+    xlp = _xlp(lp)
+    q = x @ xlp['wq']
+    if cfg.attn_bias and 'bq' in xlp:
+        q = q + xlp['bq']
+    q = q.reshape(b, t, cfg.n_heads, cfg.hd)
+    q = constrain(q, ('batch', 'seq', 'heads', 'head_dim'))
+    enc_pos = jnp.broadcast_to(jnp.arange(xk.shape[1], dtype=jnp.int32),
+                               (b, xk.shape[1]))
+    out = cm.chunked_attention(q, xk, xv, q_positions=positions,
+                               kv_positions=enc_pos, causal=False)
+    out = out.reshape(b, t, -1)
+    out = constrain(out, ('batch', 'seq', 'qkv'))
+    return out @ xlp['wo']
+
+
+def dec_layer(cfg: ModelConfig, lp, h, positions, mode, cache_l, page_table,
+              xk, xv):
+    x = cm.rms_norm(h, lp['ln1'], cfg.norm_eps)
+    new_cache_l = cache_l
+    if mode == 'train':
+        attn = dense.self_attn_train(cfg, lp, x, positions)
+    elif mode == 'prefill':
+        attn, pk, pv = dense.self_attn_prefill(
+            cfg, lp, x, positions, cache_l['k'], cache_l['v'], page_table)
+        new_cache_l = {'k': pk, 'v': pv}
+    else:
+        attn, pk, pv = dense.self_attn_decode(
+            cfg, lp, x, positions, cache_l['k'], cache_l['v'], page_table)
+        new_cache_l = {'k': pk, 'v': pv}
+    h = h + attn
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    x = cm.rms_norm(h, lp['ln_cross'], cfg.norm_eps)
+    pos2d = positions if positions.ndim == 2 else positions[:, None]
+    h = h + _cross_attn(cfg, lp, x, pos2d, xk, xv)
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    x = cm.rms_norm(h, lp['ln2'], cfg.norm_eps)
+    h = h + cm.swiglu(x, lp['wg'], lp['wu'], lp['wd'])
+    return constrain(h, ('batch', 'seq', 'embed')), new_cache_l
+
+
+def scan_dec(cfg, params, h, positions, mode, cache, page_table, xks, xvs,
+             remat=True):
+    def body(hh, xs):
+        lp, cache_l, xk, xv = xs
+        out, new_cache_l = dec_layer(cfg, lp, hh, positions, mode, cache_l,
+                                     page_table, xk, xv)
+        return out, new_cache_l
+
+    if remat and mode == 'train':
+        body = jax.checkpoint(body)
+    return jax.lax.scan(body, h, (params['dec_layers'], cache, xks, xvs))
+
+
+def forward_train(cfg: ModelConfig, params, batch, *, remat=True):
+    frames = batch['frames']                  # (B, S_enc, D) stub
+    tokens = batch['tokens']                  # (B, S_dec)
+    b, s = tokens.shape
+    enc_out = encode(cfg, params, frames)
+    xks, xvs = cross_kv(cfg, params, enc_out)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = params['embed'][tokens]
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    h, _ = scan_dec(cfg, params, h, positions, 'train', None, None, xks, xvs,
+                    remat=remat)
+    nll, cnt = cm.chunked_ce_loss(h, params['final_norm'], params['unembed'],
+                                  batch['labels'], mask=batch.get('loss_mask'),
+                                  eps=cfg.norm_eps)
+    return nll / jnp.maximum(cnt, 1.0), {'tokens': cnt}
+
+
+def prefill(cfg: ModelConfig, params, cache, batch):
+    """Encode frames, compute cross-KV, prefill decoder prefix."""
+    frames = batch['frames']
+    tokens = batch['tokens']
+    b, s = tokens.shape
+    enc_out = encode(cfg, params, frames)
+    xks, xvs = cross_kv(cfg, params, enc_out)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = params['embed'][tokens]
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    h, kv = scan_dec(cfg, params, h, positions, 'prefill',
+                     {'k': cache['k'], 'v': cache['v']},
+                     batch['page_table'], xks, xvs, remat=False)
+    last = cm.rms_norm(h[:, -1], params['final_norm'], cfg.norm_eps)
+    logits = last @ params['unembed']
+    new_cache = {'k': kv['k'], 'v': kv['v'], 'cross_k': xks, 'cross_v': xvs}
+    return new_cache, constrain(logits, ('batch', 'vocab'))
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch):
+    tokens = batch['tokens']
+    positions = batch['positions']
+    h = params['embed'][tokens][:, None, :]
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    h, kv = scan_dec(cfg, params, h, positions, 'decode',
+                     {'k': cache['k'], 'v': cache['v']},
+                     batch['page_table'], cache['cross_k'], cache['cross_v'],
+                     remat=False)
+    last = cm.rms_norm(h[:, 0], params['final_norm'], cfg.norm_eps)
+    logits = last @ params['unembed']
+    new_cache = {'k': kv['k'], 'v': kv['v'],
+                 'cross_k': cache['cross_k'], 'cross_v': cache['cross_v']}
+    return new_cache, constrain(logits, ('batch', 'vocab'))
+
+
+def cache_template(cfg: ModelConfig, n_pages: int, batch: int, enc_len: int):
+    Ld = cfg.dec_layers
+    kv_shape = (Ld, n_pages, cfg.page_size, cfg.n_kv_heads, cfg.hd)
+    kv_axes = ('layers', 'pages', None, 'kv_heads', 'head_dim')
+    x_shape = (Ld, batch, enc_len, cfg.n_kv_heads, cfg.hd)
+    x_axes = ('layers', 'batch', None, 'kv_heads', 'head_dim')
+    return {
+        'k': PSpec(kv_shape, kv_axes, 'zeros'),
+        'v': PSpec(kv_shape, kv_axes, 'zeros'),
+        'cross_k': PSpec(x_shape, x_axes, 'zeros'),
+        'cross_v': PSpec(x_shape, x_axes, 'zeros'),
+    }

@@ -1,0 +1,201 @@
+"""Mixture-of-Experts decoder (phi3.5-moe 16e top-2, llama4-scout 16e top-1 +
+shared expert).
+
+Routing is capacity-based (Switch-style): tokens are ranked within their
+assigned expert by a cumulative-sum position, dispatched into dense (E, C, D)
+buffers (expert dim sharded over the model axis → expert parallelism), and
+combined back with router weights.  Overflow tokens are dropped (standard
+capacity-factor semantics); the load-balancing auxiliary loss keeps the router
+near-uniform so drops stay rare.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import common as cm
+from repro.models import dense
+from repro.models.common import PSpec
+
+
+def template(cfg: ModelConfig) -> Dict[str, Any]:
+    L, d, f, e = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.n_experts
+    t = dense.template(cfg)
+    layers = t['layers']
+    for k in ('wg', 'wu', 'wd'):
+        del layers[k]
+    layers['router'] = PSpec((L, d, e), ('layers', 'embed', 'expert'),
+                             scale=d ** -0.5)
+    layers['we_gate'] = PSpec((L, e, d, f), ('layers', 'expert', 'embed', 'ffn'))
+    layers['we_up'] = PSpec((L, e, d, f), ('layers', 'expert', 'embed', 'ffn'))
+    layers['we_down'] = PSpec((L, e, f, d), ('layers', 'expert', 'ffn', 'embed'))
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        layers['ws_gate'] = PSpec((L, d, fs), ('layers', 'embed', 'ffn'))
+        layers['ws_up'] = PSpec((L, d, fs), ('layers', 'embed', 'ffn'))
+        layers['ws_down'] = PSpec((L, fs, d), ('layers', 'ffn', 'embed'))
+    return t
+
+
+def moe_mlp(cfg: ModelConfig, lp, x, *, capacity_factor: float = 1.25):
+    """x: (B, S, D) → (B, S, D), aux load-balance loss (f32 scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    n = b * s
+    xf = x.reshape(n, d)
+
+    logits = (xf.astype(jnp.float32) @ lp['router'].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)           # (N, E)
+    top_w, top_i = jax.lax.top_k(probs, k)            # (N, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_i.reshape(-1)                        # (N*k,) token-major
+    flat_w = top_w.reshape(-1)
+    tok_ids = jnp.arange(n * k, dtype=jnp.int32) // k
+
+    cap = int(math.ceil(k * n / e * capacity_factor))
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1   # rank in expert
+    keep = pos < cap
+    dest_c = jnp.where(keep, pos, cap)                # cap → dropped (oob)
+
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[flat_e, dest_c].set(xf[tok_ids], mode='drop')
+    buf = constrain(buf, ('expert', None, 'embed'))
+
+    g = jnp.einsum('ecd,edf->ecf', buf, lp['we_gate'])
+    u = jnp.einsum('ecd,edf->ecf', buf, lp['we_up'])
+    g = constrain(g, ('expert', None, 'ffn'))
+    u = constrain(u, ('expert', None, 'ffn'))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out = jnp.einsum('ecf,efd->ecd', h, lp['we_down'])
+    out = constrain(out, ('expert', None, 'embed'))
+
+    gathered = out[flat_e, jnp.minimum(dest_c, cap - 1)]      # (N*k, D)
+    contrib = jnp.where(keep[:, None], gathered * flat_w[:, None].astype(x.dtype),
+                        jnp.zeros_like(gathered))
+    y = jnp.zeros((n, d), x.dtype).at[tok_ids].add(contrib)
+
+    if cfg.n_shared_experts:
+        y = y + cm.swiglu(xf, lp['ws_gate'], lp['ws_up'], lp['ws_down'])
+
+    # Load-balance aux loss (Switch eq. 4): E * Σ_e f_e · P_e
+    frac = jnp.mean(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=(0, 1))
+    mean_p = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac * mean_p)
+    return y.reshape(b, s, d), aux
+
+
+def layer_apply(cfg: ModelConfig, lp, h, positions, mode: str,
+                cache_l=None, page_table=None, capacity_factor: float = 1.25):
+    x = cm.rms_norm(h, lp['ln1'], cfg.norm_eps)
+    new_cache_l = cache_l
+    if mode == 'train':
+        attn_out = dense.self_attn_train(cfg, lp, x, positions)
+    elif mode == 'prefill':
+        attn_out, pk, pv = dense.self_attn_prefill(
+            cfg, lp, x, positions, cache_l['k'], cache_l['v'], page_table)
+        new_cache_l = {'k': pk, 'v': pv}
+    else:
+        attn_out, pk, pv = dense.self_attn_decode(
+            cfg, lp, x, positions, cache_l['k'], cache_l['v'], page_table)
+        new_cache_l = {'k': pk, 'v': pv}
+    h = h + attn_out
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    x = cm.rms_norm(h, lp['ln2'], cfg.norm_eps)
+    mlp_out, aux = moe_mlp(cfg, lp, x, capacity_factor=capacity_factor)
+    h = h + mlp_out
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    return h, new_cache_l, aux
+
+
+def scan_layers(cfg: ModelConfig, layers, h, positions, mode: str,
+                cache=None, page_table=None, remat: bool = True,
+                capacity_factor: float = 1.25):
+    def body(carry, xs):
+        hh, aux_sum = carry
+        lp, cache_l = xs
+        out, new_cache_l, aux = layer_apply(
+            cfg, lp, hh, positions, mode, cache_l, page_table,
+            capacity_factor=capacity_factor)
+        return (out, aux_sum + aux), new_cache_l
+
+    if remat and mode == 'train':
+        body = jax.checkpoint(body)
+    (h, aux), new_cache = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), (layers, cache))
+    return h, new_cache, aux / cfg.n_layers
+
+
+def forward_train(cfg: ModelConfig, params, batch, *, remat: bool = True,
+                  aux_weight: float = 0.01):
+    tokens = batch['tokens']
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = dense.embed_inputs(cfg, params, tokens, batch.get('prefix_embeds'))
+    h, _, aux = scan_layers(cfg, params['layers'], h, positions, 'train',
+                            remat=remat)
+    nll, cnt = cm.chunked_ce_loss(
+        h, params['final_norm'], dense.unembed_of(cfg, params),
+        batch['labels'], mask=batch.get('loss_mask'), eps=cfg.norm_eps)
+    loss = nll / jnp.maximum(cnt, 1.0) + aux_weight * aux
+    return loss, {'tokens': cnt, 'aux_loss': aux}
+
+
+def prefill(cfg: ModelConfig, params, cache, batch):
+    tokens = batch['tokens']
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = dense.embed_inputs(cfg, params, tokens, batch.get('prefix_embeds'))
+    h, cache, _ = scan_layers(cfg, params['layers'], h, positions, 'prefill',
+                              cache=cache, page_table=batch['page_table'],
+                              remat=False)
+    last = cm.rms_norm(h[:, -1], params['final_norm'], cfg.norm_eps)
+    logits = last @ dense.unembed_of(cfg, params)
+    return cache, constrain(logits, ('batch', 'vocab'))
+
+
+def prefill_chunk(cfg: ModelConfig, params, cache, batch):
+    """Chunked prefill with past-KV readback (see dense.prefill_chunk)."""
+    tokens = batch['tokens']
+    positions = batch['positions']
+    h = dense.embed_inputs(cfg, params, tokens, batch.get('prefix_embeds'))
+
+    def body(carry, xs):
+        lp, cache_l = xs
+        x = cm.rms_norm(carry, lp['ln1'], cfg.norm_eps)
+        attn_out, pk, pv = dense.self_attn_prefill_chunk(
+            cfg, lp, x, positions, cache_l['k'], cache_l['v'],
+            batch['page_table'], batch['page_ids'], batch['offsets'],
+            batch['kv_len'])
+        hh = carry + attn_out
+        x = cm.rms_norm(hh, lp['ln2'], cfg.norm_eps)
+        mlp_out, _ = moe_mlp(cfg, lp, x, capacity_factor=2.0)
+        return hh + mlp_out, {'k': pk, 'v': pv}
+
+    h, cache = jax.lax.scan(body, h, (params['layers'], cache))
+    last = jnp.take_along_axis(h, batch['last_idx'][:, None, None], axis=1)[:, 0]
+    last = cm.rms_norm(last, params['final_norm'], cfg.norm_eps)
+    logits = last @ dense.unembed_of(cfg, params)
+    return cache, constrain(logits, ('batch', 'vocab'))
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch):
+    tokens = batch['tokens']
+    positions = batch['positions']
+    h = params['embed'][tokens][:, None, :]
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    h, cache, _ = scan_layers(cfg, params['layers'], h, positions, 'decode',
+                              cache=cache, page_table=batch['page_table'],
+                              remat=False, capacity_factor=2.0)
+    last = cm.rms_norm(h[:, 0], params['final_norm'], cfg.norm_eps)
+    logits = last @ dense.unembed_of(cfg, params)
+    return cache, constrain(logits, ('batch', 'vocab'))
+
+
+cache_template = dense.cache_template

@@ -1,0 +1,290 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent per-channel decay
+[arXiv:2404.05892].
+
+Time-mix recurrence per head (K = V = head_dim):
+    y_t = r_t · (S_{t-1} + (u ∘ k_t) ⊗ v_t)
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+with w_t = exp(-exp(w_base + tanh(x_w @ A) @ B)) — the data-dependent decay
+(the Finch signature).  Token-shift lerp coefficients are static (v5-style);
+the per-channel dynamic mix LoRAs of the full release are omitted (recorded in
+DESIGN.md) — they do not interact with Valve.
+
+Sequence paths use the *chunked* form (matmul-heavy, MXU-friendly); decode is
+the exact single-step recurrence.  The Pallas kernel in kernels/rwkv6 mirrors
+the chunked form; this module is its jnp oracle.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import common as cm
+from repro.models.common import PSpec
+
+LORA_DIM = 32
+
+
+def template(cfg: ModelConfig) -> Dict[str, Any]:
+    L, d, f, v = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    return {
+        'embed': PSpec((v, d), ('vocab', 'embed'), scale=d ** -0.5),  # tied-unembed-safe: logits ~O(1)
+        'final_norm': PSpec((d,), ('embed',), 'ones'),
+        'unembed': PSpec((d, v), ('embed', 'vocab')),
+        'layers': {
+            'ln1': PSpec((L, d), ('layers', 'embed'), 'ones'),
+            'ln2': PSpec((L, d), ('layers', 'embed'), 'ones'),
+            # time-mix
+            'mu': PSpec((L, 5, d), ('layers', None, 'embed'), 'zeros'),  # r,k,v,w,g
+            'w_base': PSpec((L, d), ('layers', 'embed'), 'zeros'),
+            'w_A': PSpec((L, d, LORA_DIM), ('layers', 'embed', None)),
+            'w_B': PSpec((L, LORA_DIM, d), ('layers', None, 'embed'),
+                         scale=0.1),
+            'Wr': PSpec((L, d, d), ('layers', 'embed', 'qkv')),
+            'Wk': PSpec((L, d, d), ('layers', 'embed', 'qkv')),
+            'Wv': PSpec((L, d, d), ('layers', 'embed', 'qkv')),
+            'Wg': PSpec((L, d, d), ('layers', 'embed', 'qkv')),
+            'Wo': PSpec((L, d, d), ('layers', 'qkv', 'embed')),
+            'u': PSpec((L, h, hd), ('layers', 'heads', 'head_dim'), 'zeros'),
+            'ln_x': PSpec((L, d), ('layers', 'embed'), 'ones'),
+            # channel-mix
+            'mu_cm': PSpec((L, 2, d), ('layers', None, 'embed'), 'zeros'),
+            'Wk_cm': PSpec((L, d, f), ('layers', 'embed', 'ffn')),
+            'Wv_cm': PSpec((L, f, d), ('layers', 'ffn', 'embed')),
+            'Wr_cm': PSpec((L, d, d), ('layers', 'embed', 'qkv')),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV6 core
+# ---------------------------------------------------------------------------
+
+def wkv6_step(r, k, v, w, u, state):
+    """One recurrence step.  r/k/v/w: (B, H, K); state: (B, H, K, V)."""
+    outer = k[..., :, None] * v[..., None, :]              # (B, H, K, V)
+    y = jnp.einsum('bhk,bhkv->bhv', r, state + u[..., :, None] * outer)
+    new_state = w[..., :, None] * state + outer
+    return y, new_state
+
+
+def wkv6_ref(r, k, v, w, u, state):
+    """Naive sequential oracle.  r/k/v/w: (B, T, H, K) f32; state (B, H, K, V)."""
+    def body(s, xs):
+        rt, kt, vt, wt = xs
+        y, s = wkv6_step(rt, kt, vt, wt, u, s)
+        return s, y
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (r, k, v, w))
+    state, ys = jax.lax.scan(body, state, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def wkv6_chunked(r, k, v, w, u, state, *, chunk: int = 32):
+    """Chunked-parallel WKV6 (f32).  Matches wkv6_ref.
+
+    Within a chunk (A_t = Π_{τ≤t} w_τ, A_0 = 1):
+      y_t = (r_t∘A_{t-1}) · S_in  +  Σ_{i<t} [(r_t∘A_{t-1}/A_i)·k_i] v_i
+            + (r_t·(u∘k_t)) v_t
+      S_out = A_T ∘ S_in + Σ_i (A_T/A_i) k_i ⊗ v_i
+    """
+    b, t, h, dk = r.shape
+    dv = v.shape[-1]
+    if t % chunk:
+        pad = chunk - t % chunk
+        z = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    n = r.shape[1] // chunk
+    resh = lambda x: x.reshape(b, n, chunk, h, x.shape[-1]).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)   # (n, B, H, c, K)
+
+    logw = jnp.log(jnp.maximum(wc, 1e-30))
+    logA = jnp.cumsum(logw, axis=-2)                      # inclusive (n,B,H,c,K)
+    A = jnp.exp(logA)
+    A_prev = jnp.exp(logA - logw)                         # A_{t-1}
+    A_end = A[..., -1:, :]                                # (n,B,H,1,K)
+
+    r_dec = rc * A_prev                                   # r_t ∘ A_{t-1}
+    k_end = kc * jnp.exp(logA[..., -1:, :] - logA)        # (A_T/A_i) k_i
+    # midpoint-normalized factors for the intra-chunk scores: the raw
+    # factored form overflows f32 once the in-chunk decay range exceeds
+    # ~85 nats (see kernels/rwkv6/kernel.py) — normalize both sides by
+    # A_{mid} so each factor is bounded by exp(range/2)
+    mid = logA[..., chunk // 2 : chunk // 2 + 1, :]
+    r_dec_m = rc * jnp.exp(logA - logw - mid)
+    k_inc_m = kc * jnp.exp(mid - logA)
+
+    # strictly-causal intra-chunk scores
+    scores = jnp.einsum('nbhtk,nbhsk->nbhts', r_dec_m, k_inc_m)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = jnp.where(mask, scores, 0.0)
+    y_intra = jnp.einsum('nbhts,nbhsv->nbhtv', scores, vc)
+    y_diag = jnp.einsum('nbhtk,nbhtv->nbhtv',
+                        rc * (u[None, None, :, None, :] * kc), vc)
+    chunk_states = jnp.einsum('nbhsk,nbhsv->nbhkv', k_end, vc)
+
+    def body(s, xs):
+        rd, a_end, cs = xs
+        y_in = jnp.einsum('bhtk,bhkv->bhtv', rd, s)
+        s = a_end[..., 0, :, None] * s + cs
+        return s, y_in
+
+    state, y_inter = jax.lax.scan(body, state, (r_dec, A_end, chunk_states))
+    y = y_intra + y_diag + y_inter                        # (n,B,H,c,V)
+    y = y.transpose(1, 0, 3, 2, 4).reshape(b, n * chunk, h, dv)
+    return y[:, :t], state
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _shift(x, last):
+    """Token shift: x_{t-1}, with ``last`` filling t=0.  x: (B, T, D)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def time_mix(cfg: ModelConfig, lp, x, shift_state, wkv_state, *, use_kernel=False):
+    b, t, d = x.shape
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    xs = _shift(x, shift_state)
+    mu = lp['mu']
+    mix = lambda i: x + (xs - x) * mu[i]
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r = (xr @ lp['Wr']).reshape(b, t, h, hd)
+    k = (xk @ lp['Wk']).reshape(b, t, h, hd)
+    v = (xv @ lp['Wv']).reshape(b, t, h, hd)
+    g = xg @ lp['Wg']
+    w_raw = (lp['w_base'].astype(jnp.float32)
+             + jnp.tanh(xw.astype(jnp.float32) @ lp['w_A'].astype(jnp.float32))
+             @ lp['w_B'].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w_raw)).reshape(b, t, h, hd)     # (0,1), data-dependent
+
+    f32 = lambda a: a.astype(jnp.float32)
+    if t == 1:
+        y, wkv_state = wkv6_step(f32(r[:, 0]), f32(k[:, 0]), f32(v[:, 0]),
+                                 w[:, 0], f32(lp['u']), wkv_state)
+        y = y[:, None]
+    elif use_kernel:
+        # call the kernel directly, not the jitted ops wrapper: a nested
+        # jit inside a scan body trips jax's closed_call lowering cache
+        from repro.kernels.rwkv6.kernel import wkv6_bthk
+        y, wkv_state = wkv6_bthk(
+            f32(r), f32(k), f32(v), w, f32(lp['u']), wkv_state,
+            interpret=jax.default_backend() == 'cpu')
+    else:
+        y, wkv_state = wkv6_chunked(f32(r), f32(k), f32(v), w,
+                                    f32(lp['u']), wkv_state)
+    # per-head group norm, then gate
+    y = cm.rms_norm(y, jnp.ones((hd,), y.dtype), 64e-5)
+    y = y.reshape(b, t, d).astype(x.dtype) * lp['ln_x']
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = y @ lp['Wo']
+    return out, x[:, -1, :], wkv_state
+
+
+def channel_mix(cfg: ModelConfig, lp, x, shift_state):
+    xs = _shift(x, shift_state)
+    mu = lp['mu_cm']
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ lp['Wk_cm']))
+    k = constrain(k, ('batch', 'seq', 'ffn'))
+    out = jax.nn.sigmoid((xr @ lp['Wr_cm']).astype(jnp.float32)).astype(x.dtype) \
+        * (k @ lp['Wv_cm'])
+    return out, x[:, -1, :]
+
+
+def layer_apply(cfg: ModelConfig, lp, h, cache_l, *, use_kernel=False):
+    x = cm.rms_norm(h, lp['ln1'], cfg.norm_eps)
+    tm_out, new_shift_tm, new_wkv = time_mix(
+        cfg, lp, x, cache_l['shift_tm'], cache_l['wkv'], use_kernel=use_kernel)
+    h = h + tm_out
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    x = cm.rms_norm(h, lp['ln2'], cfg.norm_eps)
+    cm_out, new_shift_cm = channel_mix(cfg, lp, x, cache_l['shift_cm'])
+    h = h + cm_out
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    return h, {'wkv': new_wkv, 'shift_tm': new_shift_tm,
+               'shift_cm': new_shift_cm}
+
+
+def scan_layers(cfg: ModelConfig, layers, h, cache, *, remat=True,
+                use_kernel=False):
+    def body(carry, xs):
+        lp, cache_l = xs
+        out, new_cache_l = layer_apply(cfg, lp, carry, cache_l,
+                                       use_kernel=use_kernel)
+        return out, new_cache_l
+
+    if remat:
+        body = jax.checkpoint(body)
+    return jax.lax.scan(body, h, (layers, cache))
+
+
+def init_state(cfg: ModelConfig, batch_size: int):
+    d, hd = cfg.d_model, cfg.ssm_head_dim
+    h = d // hd
+    L = cfg.n_layers
+    return {
+        'wkv': jnp.zeros((L, batch_size, h, hd, hd), jnp.float32),
+        'shift_tm': jnp.zeros((L, batch_size, d), cm.DEFAULT_DTYPE),
+        'shift_cm': jnp.zeros((L, batch_size, d), cm.DEFAULT_DTYPE),
+    }
+
+
+def cache_template(cfg: ModelConfig, batch_size: int) -> Dict[str, PSpec]:
+    d, hd = cfg.d_model, cfg.ssm_head_dim
+    h = d // hd
+    L = cfg.n_layers
+    return {
+        'wkv': PSpec((L, batch_size, h, hd, hd),
+                     ('layers', 'batch', 'heads', None, None), 'zeros',
+                     dtype=jnp.float32),
+        'shift_tm': PSpec((L, batch_size, d), ('layers', 'batch', 'embed'),
+                          'zeros'),
+        'shift_cm': PSpec((L, batch_size, d), ('layers', 'batch', 'embed'),
+                          'zeros'),
+    }
+
+
+def forward_train(cfg: ModelConfig, params, batch, *, remat=True,
+                  use_kernel=False):
+    tokens = batch['tokens']
+    b, s = tokens.shape
+    h = params['embed'][tokens]
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    cache = init_state(cfg, b)
+    h, _ = scan_layers(cfg, params['layers'], h, cache, remat=remat,
+                       use_kernel=use_kernel)
+    nll, cnt = cm.chunked_ce_loss(
+        h, params['final_norm'], params['unembed'], batch['labels'],
+        mask=batch.get('loss_mask'), eps=cfg.norm_eps)
+    return nll / jnp.maximum(cnt, 1.0), {'tokens': cnt}
+
+
+def prefill(cfg: ModelConfig, params, cache, batch):
+    tokens = batch['tokens']
+    h = params['embed'][tokens]
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    h, cache = scan_layers(cfg, params['layers'], h, cache, remat=False)
+    last = cm.rms_norm(h[:, -1], params['final_norm'], cfg.norm_eps)
+    logits = last @ params['unembed']
+    return cache, constrain(logits, ('batch', 'vocab'))
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch):
+    tokens = batch['tokens']
+    h = params['embed'][tokens][:, None, :]
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    h, cache = scan_layers(cfg, params['layers'], h, cache, remat=False)
+    last = cm.rms_norm(h[:, 0], params['final_norm'], cfg.norm_eps)
+    logits = last @ params['unembed']
+    return cache, constrain(logits, ('batch', 'vocab'))

@@ -1,0 +1,391 @@
+"""Zamba2 — hybrid Mamba2 backbone with a single SHARED attention+MLP block
+applied every ``hybrid_attn_every`` layers [arXiv:2411.15242].
+
+Mamba2 sequence paths use the chunked SSD form (intra-chunk "attention-like"
+matmuls + an inter-chunk state scan) — sub-quadratic and MXU-friendly; decode
+is the exact single-step recurrence.  The shared block attends over
+concat(hidden, initial_embedding) (width 2·d_model) with one parameter set
+reused at every application; its KV caches (one per application) are paged —
+they are the tensors Valve reclaims for this architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import common as cm
+from repro.models.common import PSpec
+
+SSD_CHUNK = 128
+
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+def _dims(cfg: ModelConfig):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    hd = cfg.ssm_head_dim
+    h = d_in // hd
+    n = cfg.ssm_state
+    return d, d_in, hd, h, n
+
+
+def template(cfg: ModelConfig) -> Dict[str, Any]:
+    d, d_in, hd, h, n = _dims(cfg)
+    L, v = cfg.n_layers, cfg.vocab_size
+    conv_ch = d_in + 2 * n
+    d2 = 2 * d
+    ah = cfg.hybrid_attn_heads
+    ahd = d2 // ah
+    t: Dict[str, Any] = {
+        'embed': PSpec((v, d), ('vocab', 'embed'), scale=d ** -0.5),  # tied-unembed-safe: logits ~O(1)
+        'final_norm': PSpec((d,), ('embed',), 'ones'),
+        'layers': {
+            'ln': PSpec((L, d), ('layers', 'embed'), 'ones'),
+            'in_proj': PSpec((L, d, 2 * d_in + 2 * n + h),
+                             ('layers', 'embed', 'qkv')),
+            'conv_w': PSpec((L, cfg.conv_kernel, conv_ch),
+                            ('layers', None, 'qkv'), scale=0.5),
+            'conv_b': PSpec((L, conv_ch), ('layers', 'qkv'), 'zeros'),
+            'A_log': PSpec((L, h), ('layers', 'heads'), 'zeros'),
+            'dt_bias': PSpec((L, h), ('layers', 'heads'), 'zeros'),
+            'D': PSpec((L, h), ('layers', 'heads'), 'ones'),
+            'norm': PSpec((L, d_in), ('layers', 'qkv'), 'ones'),
+            'out_proj': PSpec((L, d_in, d), ('layers', 'qkv', 'embed')),
+        },
+        # ONE shared attention+MLP block (paper: reused with fresh KV per app)
+        'shared': {
+            'ln1': PSpec((d2,), ('embed',), 'ones'),
+            'wq': PSpec((d2, ah * ahd), ('embed', 'qkv')),
+            'wk': PSpec((d2, ah * ahd), ('embed', 'qkv')),
+            'wv': PSpec((d2, ah * ahd), ('embed', 'qkv')),
+            'wo': PSpec((ah * ahd, d), ('qkv', 'embed')),
+            'ln2': PSpec((d2,), ('embed',), 'ones'),
+            'wg': PSpec((d2, cfg.hybrid_attn_d_ff), ('embed', 'ffn')),
+            'wu': PSpec((d2, cfg.hybrid_attn_d_ff), ('embed', 'ffn')),
+            'wd': PSpec((cfg.hybrid_attn_d_ff, d), ('ffn', 'embed')),
+        },
+    }
+    if not cfg.tie_embeddings:
+        t['unembed'] = PSpec((d, v), ('embed', 'vocab'))
+    return t
+
+
+def unembed_of(cfg, params):
+    return params['embed'].T if cfg.tie_embeddings else params['unembed']
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+
+def ssd_step(x, b_t, c_t, a_t, state):
+    """Exact decode recurrence.  x: (B,H,P); b_t/c_t: (B,N); a_t: (B,H);
+    state: (B,H,P,N)."""
+    state = a_t[..., None, None] * state \
+        + x[..., :, None] * b_t[:, None, None, :]
+    y = jnp.einsum('bhpn,bn->bhp', state, c_t)
+    return y, state
+
+
+def ssd_ref(x, b, c, a, state):
+    """Naive sequential oracle.  x: (B,T,H,P); b/c: (B,T,N); a: (B,T,H)."""
+    def body(s, xs):
+        xt, bt, ct, at = xs
+        y, s = ssd_step(xt, bt, ct, at, s)
+        return s, y
+    xs = (x.transpose(1, 0, 2, 3), b.transpose(1, 0, 2),
+          c.transpose(1, 0, 2), a.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(body, state, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def ssd_chunked(x, b, c, a, state, *, chunk: int = SSD_CHUNK):
+    """Chunked SSD (Dao & Gu 2024 block decomposition).  Matches ssd_ref.
+
+    x: (B,T,H,P) f32; b,c: (B,T,N); a: (B,T,H) in (0,1); state: (B,H,P,N).
+    """
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    if t % chunk:
+        pad = chunk - t % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    nc = x.shape[1] // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p).transpose(1, 0, 3, 2, 4)  # (nc,B,H,c,P)
+    bc = b.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)        # (nc,B,c,N)
+    cc = c.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    ac = a.reshape(bsz, nc, chunk, h).transpose(1, 0, 3, 2)        # (nc,B,H,c)
+
+    loga = jnp.log(jnp.maximum(ac, 1e-30))
+    L = jnp.cumsum(loga, axis=-1)                                  # inclusive
+    # intra-chunk: coeff_{t,i} = exp(L_t - L_i) * a_i ... note h_t includes a_t
+    # h_t = Σ_{i≤t} (Π_{τ=i+1..t} a_τ) x_i b_i  → exp(L_t - L_i)
+    M = jnp.exp(L[..., :, None] - L[..., None, :])                 # (nc,B,H,c,c)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    M = jnp.where(causal, M, 0.0)
+    cb = jnp.einsum('nbtk,nbsk->nbts', cc, bc)                     # (nc,B,c,c)
+    y_intra = jnp.einsum('nbts,nbhts,nbhsp->nbhtp', cb, M, xc)
+
+    decay_to_end = jnp.exp(L[..., -1:] - L)                        # (nc,B,H,c)
+    chunk_state = jnp.einsum('gbhs,gbhsp,gbsn->gbhpn',
+                             decay_to_end, xc, bc)
+    a_tot = jnp.exp(L[..., -1])                                    # (nc,B,H)
+    decay_in = jnp.exp(L)                                          # Π_{1..t}
+
+    def body(s, xs):
+        cci, di, at, cs = xs
+        y_in = jnp.einsum('btn,bhpn,bht->bhtp', cci, s, di)
+        s = at[..., None, None] * s + cs
+        return s, y_in
+
+    state, y_inter = jax.lax.scan(body, state,
+                                  (cc, decay_in, a_tot, chunk_state))
+    y = (y_intra + y_inter).transpose(1, 0, 3, 2, 4).reshape(bsz, nc * chunk, h, p)
+    return y[:, :t], state
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state):
+    """Depthwise causal conv.  xbc: (B,T,C); conv_w: (K,C); conv_state:
+    (B,K-1,C) — the last K-1 pre-conv inputs from the previous segment."""
+    k = conv_w.shape[0]
+    full = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    out = sum(full[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(k))
+    new_state = full[:, -(k - 1):] if k > 1 else conv_state
+    return jax.nn.silu((out + conv_b).astype(jnp.float32)).astype(xbc.dtype), \
+        new_state
+
+
+def mamba_block(cfg: ModelConfig, lp, h, cache_l):
+    """One Mamba2 layer.  h: (B,T,D)."""
+    d, d_in, hd, nh, n = _dims(cfg)
+    bsz, t, _ = h.shape
+    x = cm.rms_norm(h, lp['ln'], cfg.norm_eps)
+    zxbcdt = x @ lp['in_proj']
+    zxbcdt = constrain(zxbcdt, ('batch', 'seq', 'qkv'))
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * n], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, lp['conv_w'], lp['conv_b'],
+                                 cache_l['conv'])
+    xs, b, c = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    xs = xs.reshape(bsz, t, nh, hd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp['dt_bias'])   # (B,T,H)
+    a = jnp.exp(-jnp.exp(lp['A_log'].astype(jnp.float32)) * dt)    # (0,1)
+    xdt = xs * dt[..., None]
+    f32 = lambda v_: v_.astype(jnp.float32)
+    if t == 1:
+        y, new_ssm = ssd_step(xdt[:, 0], f32(b[:, 0]), f32(c[:, 0]),
+                              a[:, 0], cache_l['ssm'])
+        y = y[:, None]
+    else:
+        y, new_ssm = ssd_chunked(xdt, f32(b), f32(c), a, cache_l['ssm'])
+    y = y + lp['D'][:, None] * xs                                   # skip
+    y = y.reshape(bsz, t, d_in)
+    y = cm.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+                    .astype(jnp.float32), lp['norm'], cfg.norm_eps)
+    out = y.astype(h.dtype) @ lp['out_proj']
+    return h + out, {'conv': new_conv, 'ssm': new_ssm}
+
+
+# ---------------------------------------------------------------------------
+# Shared attention block (paged KV per application)
+# ---------------------------------------------------------------------------
+
+def shared_attn(cfg: ModelConfig, sp, h, e0, positions, mode,
+                pool_k=None, pool_v=None, page_table=None):
+    """h, e0: (B,T,D).  Returns (h', new_pool_k, new_pool_v)."""
+    b, t, d = h.shape
+    ah = cfg.hybrid_attn_heads
+    ahd = 2 * d // ah
+    cat = jnp.concatenate([h, e0], axis=-1)
+    x = cm.rms_norm(cat, sp['ln1'], cfg.norm_eps)
+    q = (x @ sp['wq']).reshape(b, t, ah, ahd)
+    k = (x @ sp['wk']).reshape(b, t, ah, ahd)
+    v = (x @ sp['wv']).reshape(b, t, ah, ahd)
+    q = constrain(q, ('batch', 'seq', 'heads', 'head_dim'))
+    k = constrain(k, ('batch', 'seq', 'heads', 'head_dim'))
+    v = constrain(v, ('batch', 'seq', 'heads', 'head_dim'))
+    q = cm.rope(q, positions, cfg.rope_theta)
+    k = cm.rope(k, positions, cfg.rope_theta)
+    if mode == 'train':
+        out = cm.chunked_attention(q, k, v, q_positions=positions,
+                                   kv_positions=positions, causal=True)
+    elif mode == 'prefill':
+        pool_k = cm.kv_write_prefill(pool_k, page_table, k)
+        pool_v = cm.kv_write_prefill(pool_v, page_table, v)
+        out = cm.chunked_attention(q, k, v, q_positions=positions,
+                                   kv_positions=positions, causal=True)
+    elif mode == 'decode_dense':
+        # long-context decode: contiguous KV (B, S, AH, AHD), S sharded over
+        # (pod, data) — sequence-parallel attention, no page indirection.
+        pos = positions[:, 0]
+        bidx = jnp.arange(b, dtype=jnp.int32)
+        pool_k = pool_k.at[bidx, pos].set(k[:, 0])
+        pool_v = pool_v.at[bidx, pos].set(v[:, 0])
+        s_max = pool_k.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(s_max, dtype=jnp.int32),
+                                  (b, s_max))
+        valid = kv_pos <= pos[:, None]
+        out = cm.attention(q, pool_k, pool_v, q_positions=pos[:, None],
+                           kv_positions=kv_pos, kv_valid=valid, causal=False)
+    else:  # decode: positions (B, 1) == (B,) broadcast of new-token index
+        pos = positions[:, 0]
+        pg = pool_k.shape[-3]
+        page_idx = jnp.take_along_axis(page_table, (pos // pg)[:, None],
+                                       axis=1)[:, 0]
+        pool_k = cm.kv_write_token(pool_k, page_idx, pos % pg, k[:, 0])
+        pool_v = cm.kv_write_token(pool_v, page_idx, pos % pg, v[:, 0])
+        out = cm.paged_attention_ref(q[:, 0], pool_k, pool_v, page_table,
+                                     pos + 1)[:, None]
+    out = out.reshape(b, t, ah * ahd)
+    out = constrain(out, ('batch', 'seq', 'qkv'))
+    h = h + out @ sp['wo']
+    cat = jnp.concatenate([h, e0], axis=-1)
+    x = cm.rms_norm(cat, sp['ln2'], cfg.norm_eps)
+    h = h + cm.swiglu(x, sp['wg'], sp['wu'], sp['wd'])
+    return constrain(h, ('batch', 'seq', 'embed')), pool_k, pool_v
+
+
+# ---------------------------------------------------------------------------
+# Full stack
+# ---------------------------------------------------------------------------
+
+def scan_layers(cfg: ModelConfig, params, h, e0, positions, mode,
+                mamba_cache, attn_cache, page_table=None, remat=True):
+    """mamba_cache: {'conv': (L,B,K-1,C), 'ssm': (L,B,H,P,N)};
+    attn_cache: {'k','v': (n_apps, P, pg, AH, AHD)} or None (train)."""
+    every = cfg.hybrid_attn_every
+    sp = params['shared']
+
+    def body(carry, xs):
+        hh, ak, av = carry
+        idx, lp, mcache_l = xs
+        hh, new_mcache = mamba_block(cfg, lp, hh, mcache_l)
+
+        def with_attn(args):
+            hh, ak, av = args
+            app = idx // every
+            if ak is None:
+                h2, _, _ = shared_attn(cfg, sp, hh, e0, positions, mode)
+                return h2, ak, av
+            pk = ak[app] if mode != 'train' else None
+            pv = av[app] if mode != 'train' else None
+            h2, pk, pv = shared_attn(cfg, sp, hh, e0, positions, mode,
+                                     pk, pv, page_table)
+            ak2 = jax.lax.dynamic_update_index_in_dim(ak, pk, app, 0)
+            av2 = jax.lax.dynamic_update_index_in_dim(av, pv, app, 0)
+            return h2, ak2, av2
+
+        is_attn = (idx + 1) % every == 0
+        if attn_cache is None:
+            hh, ak, av = jax.lax.cond(is_attn, with_attn,
+                                      lambda args: args, (hh, ak, av))
+        else:
+            hh, ak, av = jax.lax.cond(is_attn, with_attn,
+                                      lambda args: args, (hh, ak, av))
+        return (hh, ak, av), new_mcache
+
+    if remat and mode == 'train':
+        body = jax.checkpoint(body)
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    if attn_cache is None:
+        carry = (h, None, None)
+    else:
+        carry = (h, attn_cache['k'], attn_cache['v'])
+    (h, ak, av), new_mamba = jax.lax.scan(
+        body, carry, (idxs, params['layers'], mamba_cache))
+    new_attn = None if ak is None else {'k': ak, 'v': av}
+    return h, new_mamba, new_attn
+
+
+def mamba_cache_template(cfg: ModelConfig, batch_size: int):
+    d, d_in, hd, h, n = _dims(cfg)
+    L = cfg.n_layers
+    conv_ch = d_in + 2 * n
+    return {
+        'conv': PSpec((L, batch_size, cfg.conv_kernel - 1, conv_ch),
+                      ('layers', 'batch', None, 'qkv'), 'zeros'),
+        'ssm': PSpec((L, batch_size, h, hd, n),
+                     ('layers', 'batch', 'heads', None, 'state'), 'zeros',
+                     dtype=jnp.float32),
+    }
+
+
+def attn_cache_template(cfg: ModelConfig, n_pages: int,
+                        batch: Optional[int] = None):
+    """Paged shared-attn KV.  ``batch=None`` → global pool (engine);
+    otherwise per-request region layout (distributed)."""
+    ah = cfg.hybrid_attn_heads
+    ahd = 2 * cfg.d_model // ah
+    if batch is None:
+        shape = (n_attn_apps(cfg), n_pages, cfg.page_size, ah, ahd)
+        axes = ('layers', 'pages', None, 'heads', 'head_dim')
+    else:
+        shape = (n_attn_apps(cfg), batch, n_pages, cfg.page_size, ah, ahd)
+        axes = ('layers', 'batch', 'pages', None, 'heads', 'head_dim')
+    return {'k': PSpec(shape, axes, 'zeros'), 'v': PSpec(shape, axes, 'zeros')}
+
+
+def attn_cache_template_dense(cfg: ModelConfig, batch: int, max_seq: int):
+    """Contiguous long-context KV (S sharded over data): long_500k decode."""
+    ah = cfg.hybrid_attn_heads
+    ahd = 2 * cfg.d_model // ah
+    shape = (n_attn_apps(cfg), batch, max_seq, ah, ahd)
+    axes = ('layers', 'batch', 'kv_seq', 'heads', 'head_dim')
+    return {'k': PSpec(shape, axes, 'zeros'), 'v': PSpec(shape, axes, 'zeros')}
+
+
+def _positions_train(b, s):
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+
+def forward_train(cfg: ModelConfig, params, batch, *, remat=True):
+    tokens = batch['tokens']
+    b, s = tokens.shape
+    h = params['embed'][tokens]
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    e0 = h
+    mc = cm.init_from_template(mamba_cache_template(cfg, b),
+                               jax.random.PRNGKey(0))
+    h, _, _ = scan_layers(cfg, params, h, e0, _positions_train(b, s), 'train',
+                          mc, None, remat=remat)
+    nll, cnt = cm.chunked_ce_loss(h, params['final_norm'],
+                                  unembed_of(cfg, params), batch['labels'],
+                                  mask=batch.get('loss_mask'), eps=cfg.norm_eps)
+    return nll / jnp.maximum(cnt, 1.0), {'tokens': cnt}
+
+
+def prefill(cfg: ModelConfig, params, cache, batch):
+    tokens = batch['tokens']
+    b, s = tokens.shape
+    h = params['embed'][tokens]
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    pos = _positions_train(b, s)
+    h, mc, ac = scan_layers(cfg, params, h, h, pos, 'prefill',
+                            cache['mamba'], cache['attn'],
+                            page_table=batch['page_table'], remat=False)
+    last = cm.rms_norm(h[:, -1], params['final_norm'], cfg.norm_eps)
+    logits = last @ unembed_of(cfg, params)
+    return {'mamba': mc, 'attn': ac}, constrain(logits, ('batch', 'vocab'))
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch, *,
+                long_context: bool = False):
+    tokens = batch['tokens']
+    positions = batch['positions']           # (B,)
+    h = params['embed'][tokens][:, None, :]
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    mode = 'decode_dense' if long_context else 'decode'
+    h, mc, ac = scan_layers(cfg, params, h, h, positions[:, None], mode,
+                            cache['mamba'], cache['attn'],
+                            page_table=batch.get('page_table'), remat=False)
+    last = cm.rms_norm(h[:, 0], params['final_norm'], cfg.norm_eps)
+    logits = last @ unembed_of(cfg, params)
+    return {'mamba': mc, 'attn': ac}, constrain(logits, ('batch', 'vocab'))

@@ -1,0 +1,192 @@
+"""Global paged KV pool with equal-size reclamation handles (paper §5).
+
+Physical layout (mirrors the JAX pool arrays the engine owns):
+
+    page 0                      — the QUARANTINE page (always mapped)
+    pages 1 … n_handles·pph     — handle h owns pages [1+h·pph, 1+(h+1)·pph)
+
+Pages are allocated from a single free list shared by all requests, so a
+request's pages scatter across handles (the fragmentation the paper's
+Algorithm 1 exploits).  Handles are either *online-reserved* (the MIAD
+headroom H) or offline-usable.  Reclaiming a handle remaps every mapped page
+in it to quarantine and transfers the handle to the reserved set — no page is
+ever unmapped, so no access can fault.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set
+
+QUARANTINE_PAGE = 0
+
+
+@dataclass
+class PoolStats:
+    allocs: int = 0
+    frees: int = 0
+    reclaims: int = 0
+    reclaimed_pages: int = 0
+    alloc_failures: int = 0
+
+
+class KVPool:
+    def __init__(self, n_handles: int, pages_per_handle: int,
+                 page_size: int = 16, reserved_handles: int = 1):
+        assert n_handles >= 1 and pages_per_handle >= 1
+        self.n_handles = n_handles
+        self.pph = pages_per_handle
+        self.page_size = page_size
+        self.n_pages = 1 + n_handles * pages_per_handle
+
+        # page → owning request id (None = free); page 0 is never owned
+        self.owner: List[Optional[str]] = [None] * self.n_pages
+        # request id → its mapped pages, in allocation order
+        self.pages_of: Dict[str, List[int]] = {}
+        # request id → 'online' | 'offline'
+        self.klass_of: Dict[str, str] = {}
+        # free pages per handle (deque for O(1) pop)
+        self.free_in_handle: List[deque] = [
+            deque(self._handle_pages(h)) for h in range(n_handles)]
+        # MIAD-reserved handles (online headroom), insertion-ordered for FIFO
+        self.reserved: "OrderedDict[int, float]" = OrderedDict()
+        for h in range(min(reserved_handles, n_handles)):
+            self.reserved[h] = 0.0
+        self.stats = PoolStats()
+
+    # ------------------------------------------------------------- layout
+    def _handle_pages(self, h: int) -> range:
+        return range(1 + h * self.pph, 1 + (h + 1) * self.pph)
+
+    def handle_of(self, page: int) -> int:
+        assert page >= 1, 'quarantine page belongs to no handle'
+        return (page - 1) // self.pph
+
+    def reqs_of_handle(self, h: int) -> Set[str]:
+        return {self.owner[p] for p in self._handle_pages(h)
+                if self.owner[p] is not None}
+
+    # ------------------------------------------------------------ queries
+    def free_pages_for(self, klass: str) -> int:
+        if klass == 'online':
+            hs = self.reserved.keys()
+        else:
+            hs = (h for h in range(self.n_handles) if h not in self.reserved)
+        return sum(len(self.free_in_handle[h]) for h in hs)
+
+    def used_pages_for(self, klass: str) -> int:
+        return sum(len(v) for r, v in self.pages_of.items()
+                   if self.klass_of[r] == klass)
+
+    def online_used_handles(self) -> int:
+        """Reserved handles with ≥1 online page (MIAD pressure signal)."""
+        used = 0
+        for h in self.reserved:
+            if any(self.owner[p] is not None for p in self._handle_pages(h)):
+                used += 1
+        return used
+
+    # ---------------------------------------------------------- alloc/free
+    def alloc(self, req_id: str, n: int, klass: str = 'offline'
+              ) -> Optional[List[int]]:
+        """Allocate ``n`` pages for ``req_id``; None if insufficient."""
+        assert klass in ('online', 'offline')
+        if klass == 'online':
+            handles = list(self.reserved.keys())
+        else:
+            handles = [h for h in range(self.n_handles)
+                       if h not in self.reserved]
+        if sum(len(self.free_in_handle[h]) for h in handles) < n:
+            self.stats.alloc_failures += 1
+            return None
+        got: List[int] = []
+        for h in handles:
+            fl = self.free_in_handle[h]
+            while fl and len(got) < n:
+                p = fl.popleft()
+                self.owner[p] = req_id
+                got.append(p)
+            if len(got) == n:
+                break
+        self.pages_of.setdefault(req_id, []).extend(got)
+        self.klass_of[req_id] = klass
+        self.stats.allocs += 1
+        return got
+
+    def free(self, req_id: str) -> int:
+        """Release every page of ``req_id``; returns #pages freed."""
+        pages = self.pages_of.pop(req_id, [])
+        self.klass_of.pop(req_id, None)
+        for p in pages:
+            if self.owner[p] == req_id:
+                self.owner[p] = None
+                self.free_in_handle[self.handle_of(p)].append(p)
+        self.stats.frees += 1
+        return len(pages)
+
+    # ---------------------------------------------------------- MIAD hooks
+    def offline_handles(self) -> List[int]:
+        return [h for h in range(self.n_handles) if h not in self.reserved]
+
+    def empty_offline_handles(self) -> List[int]:
+        return [h for h in self.offline_handles()
+                if len(self.free_in_handle[h]) == self.pph]
+
+    def reserve_handle(self, h: int, now: float = 0.0) -> None:
+        """Move a (fully-free) handle into the online reservation."""
+        assert h not in self.reserved
+        assert len(self.free_in_handle[h]) == self.pph, \
+            'reserve requires a reclaimed/empty handle'
+        self.reserved[h] = now
+
+    def release_reserved_handle(self) -> Optional[int]:
+        """MIAD additive decrease: return the emptiest reserved handle to
+        offline use (never one holding online pages)."""
+        for h in list(self.reserved.keys()):
+            if len(self.free_in_handle[h]) == self.pph:
+                del self.reserved[h]
+                return h
+        return None
+
+    # ---------------------------------------------------------- reclamation
+    def reclaim_handles(self, handles: Sequence[int], now: float = 0.0
+                        ) -> Dict[str, List[int]]:
+        """Remap every mapped page of ``handles`` to quarantine and move the
+        handles to the online reservation.
+
+        Returns {offline request id: [its invalidated page ids]} — the
+        paper's "invalidated page IDs exposed to the framework".  The caller
+        (ValveRuntime) must have disabled offline compute first; this class
+        only records, the runtime asserts the ordering invariant.
+        """
+        invalidated: Dict[str, List[int]] = {}
+        for h in handles:
+            assert h not in self.reserved, 'cannot reclaim a reserved handle'
+            for p in self._handle_pages(h):
+                r = self.owner[p]
+                if r is not None:
+                    invalidated.setdefault(r, []).append(p)
+                    self.owner[p] = None
+                    self.stats.reclaimed_pages += 1
+            self.free_in_handle[h] = deque(self._handle_pages(h))
+            self.reserved[h] = now
+        # an invalidated request loses *all* its KV (it restarts from its
+        # prompt+generated tokens), so release its surviving pages too
+        for r in list(invalidated.keys()):
+            self.free(r)
+        self.stats.reclaims += 1
+        return invalidated
+
+    # ---------------------------------------------------------- invariants
+    def check_invariants(self) -> None:
+        seen: Set[int] = set()
+        for r, pages in self.pages_of.items():
+            for p in pages:
+                assert p != QUARANTINE_PAGE, 'live request maps quarantine'
+                assert self.owner[p] == r, (r, p, self.owner[p])
+                assert p not in seen, f'page {p} double-owned'
+                seen.add(p)
+        for h in range(self.n_handles):
+            for p in self.free_in_handle[h]:
+                assert self.owner[p] is None
+                assert p not in seen, f'page {p} both free and owned'

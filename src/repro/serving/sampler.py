@@ -1,0 +1,21 @@
+"""Token sampling for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits, *, temperature: float = 0.0, key=None, top_k: int = 0):
+    """logits (B, V) → tokens (B,) int32.
+
+    temperature 0 → greedy; otherwise softmax sampling (optionally top-k
+    truncated).  ``key`` is required when temperature > 0.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert key is not None, 'temperature sampling needs a PRNG key'
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

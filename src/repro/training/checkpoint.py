@@ -1,0 +1,167 @@
+"""Sharded checkpoints with atomic commit and elastic restore.
+
+Layout::
+
+    <dir>/step_<N>.tmp/          # written first
+        manifest.json            # step, tree structure, global shapes, mesh
+        host<k>.npz              # this process's addressable shards
+    <dir>/step_<N>/              # atomic rename after fsync — a crashed
+                                 # writer never leaves a half-checkpoint
+
+Restore reassembles global arrays from shard files and re-shards onto the
+*current* mesh, which may differ from the writer's (elastic scaling: a host
+is lost, the data axis shrinks, training resumes from the same step).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+_NATIVE_KINDS = set('fiub')
+
+
+def _storable(a: np.ndarray) -> np.ndarray:
+    """npz can't store ml_dtypes (bf16 etc.) — stage through float32; the
+    manifest records the true dtype for restore."""
+    a = np.asarray(a)
+    if a.dtype.kind in _NATIVE_KINDS and a.dtype.name != 'bfloat16':
+        return a
+    return a.astype(np.float32)
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = '/'.join(str(getattr(p, 'key', getattr(p, 'idx', p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, *, process_index: Optional[int] = None
+         ) -> str:
+    """Write one checkpoint; returns the committed directory."""
+    pidx = jax.process_index() if process_index is None else process_index
+    tmp = os.path.join(ckpt_dir, f'step_{step}.tmp')
+    final = os.path.join(ckpt_dir, f'step_{step}')
+    os.makedirs(tmp, exist_ok=True)
+
+    arrays: Dict[str, np.ndarray] = {}
+    manifest_leaves = {}
+    for key, leaf in _flatten_with_paths(tree):
+        leaf = jax.numpy.asarray(leaf) if np.isscalar(leaf) else leaf
+        shards = getattr(leaf, 'addressable_shards', None)
+        if shards is None:  # plain numpy
+            arrays[f'{key}::0'] = _storable(leaf)
+            manifest_leaves[key] = {
+                'shape': list(np.shape(leaf)),
+                'dtype': str(np.asarray(leaf).dtype),
+                'shards': {'0': [[0, n] for n in np.shape(leaf)]},
+            }
+            continue
+        entry = {'shape': list(leaf.shape), 'dtype': str(leaf.dtype),
+                 'shards': {}}
+        seen_keys = set()
+        for sh in shards:
+            idx = sh.index  # tuple of slices into the global array
+            bounds = [[(s.start or 0),
+                       (s.stop if s.stop is not None else dim)]
+                      for s, dim in zip(idx, leaf.shape)]
+            bkey = json.dumps(bounds)
+            if bkey in seen_keys:
+                continue  # replicated shard — store once
+            seen_keys.add(bkey)
+            sid = f'{len(entry["shards"])}'
+            arrays[f'{key}::{sid}'] = _storable(sh.data)
+            entry['shards'][sid] = bounds
+        manifest_leaves[key] = entry
+
+    np.savez(os.path.join(tmp, f'host{pidx}.npz'), **arrays)
+    manifest = {'step': step, 'leaves': manifest_leaves,
+                'n_processes': jax.process_count()}
+    with open(os.path.join(tmp, 'manifest.json'), 'w') as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split('_', 1)[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith('step_') and not d.endswith('.tmp')]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target_tree, *, shardings=None):
+    """Rebuild ``target_tree``-structured arrays from a checkpoint.
+
+    ``shardings``: optional pytree of NamedShardings for the *current* mesh —
+    global arrays are re-sharded onto it (elastic restore).  Without it,
+    plain numpy arrays are returned.
+    """
+    d = os.path.join(ckpt_dir, f'step_{step}')
+    with open(os.path.join(d, 'manifest.json')) as f:
+        manifest = json.load(f)
+
+    hosts = [fn for fn in os.listdir(d) if fn.endswith('.npz')]
+    stores = [np.load(os.path.join(d, fn)) for fn in hosts]
+
+    def assemble(key: str, entry) -> np.ndarray:
+        dt = entry['dtype']
+        buf_dt = np.float32 if np.dtype(dt).kind not in _NATIVE_KINDS \
+            or dt == 'bfloat16' else np.dtype(dt)
+        out = np.zeros(entry['shape'], dtype=buf_dt)
+        filled = np.zeros(entry['shape'], dtype=bool) if entry['shape'] else None
+        for store in stores:
+            for sid, bounds in entry['shards'].items():
+                akey = f'{key}::{sid}'
+                if akey not in store:
+                    continue
+                sl = tuple(slice(lo, hi) for lo, hi in bounds)
+                out[sl] = store[akey]
+                if filled is not None:
+                    filled[sl] = True
+        if filled is not None:
+            assert filled.all(), f'checkpoint leaf {key} has holes'
+        return out
+
+    leaves = {}
+    for key, entry in manifest['leaves'].items():
+        leaves[key] = assemble(key, entry)
+
+    flat_target = _flatten_with_paths(target_tree)
+    _, treedef = jax.tree_util.tree_flatten(target_tree)
+    ordered = []
+    for key, tgt in flat_target:
+        arr = leaves[key]
+        want = np.dtype(jax.numpy.asarray(tgt).dtype
+                        if not hasattr(tgt, 'dtype') else tgt.dtype)
+        ordered.append(arr.astype(want))
+    restored = jax.tree_util.tree_unflatten(treedef, ordered)
+
+    if shardings is not None:
+        restored = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), restored, shardings)
+    return restored, manifest['step']
+
+
+def prune(ckpt_dir: str, keep: int = 3) -> None:
+    """Keep the newest ``keep`` checkpoints."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(int(d.split('_', 1)[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith('step_') and not d.endswith('.tmp'))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f'step_{s}'), ignore_errors=True)

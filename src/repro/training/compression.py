@@ -1,0 +1,90 @@
+"""int8-compressed gradient all-reduce with error feedback.
+
+The data-parallel gradient reduce moves `params × 4` bytes per step per
+device; quantizing to int8 cuts collective bytes 4× (2× vs bf16).  Scheme:
+
+- per-leaf symmetric quantization, scale = max|g| / (127 / n_shards) so the
+  *sum* over shards still fits int8 (psum preserves dtype → int8 stays on
+  the wire);
+- error feedback: the quantization residual is carried to the next step, so
+  compression error accumulates to O(1) instead of O(steps) (SGD with
+  error-feedback converges at the uncompressed rate).
+
+Implemented with shard_map over the data axes; the model axis can stay auto
+(params sharded over 'model' are untouched — each model shard reduces its own
+slice over data).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_leaf(g, err, axes: Tuple[str, ...], n_shards: int):
+    """One leaf: error-feedback int8 quantize → psum → dequantize.
+
+    Two collective rounds: (1) pmax of the per-shard max|g| (one f32 scalar —
+    negligible bytes) so every shard quantizes at the SAME scale, then
+    (2) psum of the int8 payload.  The shared scale reserves 1/n headroom so
+    the cross-shard sum cannot overflow int8.
+
+    Returns (mean-reduced f32 gradient, new error residual).
+    """
+    g = g.astype(jnp.float32) + err
+    amax = jax.lax.pmax(jnp.max(jnp.abs(g)), axes)     # scalar round
+    qmax = 127.0 / max(n_shards, 1)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(g / scale), -qmax, qmax).astype(jnp.int8)
+    new_err = g - dequantize(q, scale)
+    qsum = jax.lax.psum(q, axes)                       # int8 on the wire
+    return dequantize(qsum, scale) / n_shards, new_err
+
+
+def make_compressed_allreduce(mesh: Mesh, grad_specs,
+                              data_axes: Sequence[str] = ('pod', 'data')):
+    """Returns fn(grads, err) → (reduced_grads, new_err) under shard_map.
+
+    ``grad_specs``: pytree of PartitionSpecs for the gradients (model-axis
+    sharding preserved; the data axes must not appear — grads are per-shard
+    values being reduced).
+    """
+    axes = tuple(a for a in data_axes if a in mesh.axis_names)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+
+    def to_local_spec(spec):
+        # inside shard_map the grads are manual over data axes but those axes
+        # don't appear in grad tensors; specs pass through unchanged
+        return spec
+
+    specs = jax.tree.map(to_local_spec, grad_specs,
+                         is_leaf=lambda s: isinstance(s, P))
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(specs, specs), out_specs=(specs, specs),
+        check_vma=False)
+    def reduce_fn(grads, err):
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = tdef.flatten_up_to(err)
+        out = [compressed_psum_leaf(g, e, axes, n)
+               for g, e in zip(flat_g, flat_e)]
+        new_g = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_e = jax.tree.unflatten(tdef, [o[1] for o in out])
+        return new_g, new_e
+
+    return reduce_fn
+
+
+def init_error_state(grads_like):
+    return jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

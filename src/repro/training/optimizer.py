@@ -1,0 +1,130 @@
+"""AdamW (hand-rolled — no optax in this environment) with ZeRO-1 moment
+sharding hooks.
+
+Moments are pytrees shaped like params.  ``moment_axes`` derives their logical
+sharding from the param axes; with ``zero1=True`` the first dimension that is
+unsharded in the param spec is additionally sharded over the data axis —
+optimizer state then scales O(1/|data|) per device on top of TP.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0          # global-norm clip; 0 disables
+    warmup_steps: int = 100
+    decay_steps: int = 10_000       # cosine decay horizon
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step):
+    """Linear warmup → cosine decay (f32 scalar, jit-safe)."""
+    step = step.astype(jnp.float32) if hasattr(step, 'astype') else float(step)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    return {
+        'step': jnp.zeros((), jnp.int32),
+        'mu': jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params),
+        'nu': jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, opt_state
+                 ) -> Tuple[Any, dict, dict]:
+    """One AdamW step; returns (new_params, new_opt_state, metrics)."""
+    step = opt_state['step'] + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    lr = lr_at(cfg, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        step_v = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step_v + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(opt_state['mu'])
+    flat_nu = tdef.flatten_up_to(opt_state['nu'])
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+    new_state = {'step': step, 'mu': new_mu, 'nu': new_nu}
+    return new_p, new_state, {'lr': lr, 'grad_norm': gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Sharding of optimizer state
+# ---------------------------------------------------------------------------
+
+def zero1_moment_specs(param_shapes, param_specs, mesh, data_axes=('pod', 'data')):
+    """ZeRO-1: shard each moment over the data axis on top of the param's TP
+    spec — the first dim that is unsharded in the param spec and divisible by
+    the data-axis size gets the data axes (PartitionSpec level, needs shapes
+    for the divisibility check)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    axes = tuple(a for a in data_axes if a in mesh.axis_names)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+
+    def one(shape_leaf, sharding):
+        spec = sharding.spec if hasattr(sharding, 'spec') else sharding
+        parts = list(spec) + [None] * (len(shape_leaf.shape) - len(spec))
+        for i, (dim, p) in enumerate(zip(shape_leaf.shape, parts)):
+            if p is None and dim % n == 0 and dim >= n:
+                parts[i] = axes if len(axes) > 1 else axes[0]
+                break
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, param_shapes, param_specs)
+
+
+def opt_state_specs(param_specs, mesh, *, zero1: bool = False,
+                    param_shapes=None):
+    """NamedSharding tree for the optimizer state."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    if zero1:
+        assert param_shapes is not None, 'zero1 needs param shapes'
+        m = zero1_moment_specs(param_shapes, param_specs, mesh)
+    else:
+        m = param_specs
+    return {'step': NamedSharding(mesh, P()), 'mu': m, 'nu': m}

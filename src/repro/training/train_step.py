@@ -1,0 +1,149 @@
+"""Distributed train step: microbatch gradient accumulation, remat (inside
+the model's scan-over-layers), AdamW, ZeRO-1 moment sharding.
+
+``make_train_step(model, mesh)`` returns (jitted_step, in/out shardings).
+Microbatching splits the global batch along its leading axis and scans,
+accumulating f32 grads — under XLA async collectives the DP reduce of
+microbatch *i* overlaps the compute of *i+1*.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    TRAIN_RULES, axis_rules, logical_to_spec, shaped_spec, tree_spec_shaped)
+from repro.models.api import Model
+from repro.training import optimizer as opt
+
+
+def param_specs(model: Model, mesh: Mesh, rules=None):
+    return tree_spec_shaped(model.param_axes(), model.param_shapes(),
+                            rules or TRAIN_RULES, mesh)
+
+
+def batch_specs(model: Model, shape, mesh: Mesh, rules=None):
+    rules = rules or TRAIN_RULES
+    specs = model.input_specs(shape)
+    return {k: NamedSharding(mesh, shaped_spec(specs[k].shape, v, rules, mesh))
+            for k, v in model.input_axes(shape).items()}
+
+
+def make_train_step(model: Model, mesh: Optional[Mesh], *,
+                    opt_cfg: Optional[opt.AdamWConfig] = None,
+                    microbatches: int = 1,
+                    zero1: bool = True,
+                    rules=None,
+                    donate: bool = True):
+    """Returns (step_fn, make_shardings).
+
+    step_fn(params, opt_state, batch) → (params, opt_state, metrics).
+    Works meshless (CPU tests) and under any (data[,pod],model) mesh.
+    """
+    rules = rules or TRAIN_RULES
+    ocfg = opt_cfg or opt.AdamWConfig()
+
+    def loss_fn(params, mb):
+        with axis_rules(mesh, rules):
+            loss, aux = model.loss_fn(params, mb)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, aux), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (l, _aux), g = grad_fn(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (gzero, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            aux = {}
+
+        params, opt_state, metrics = opt.adamw_update(
+            ocfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    def make_shardings(shape):
+        assert mesh is not None
+        pspec = param_specs(model, mesh, rules)
+        ospec = opt.opt_state_specs(
+            pspec, mesh, zero1=zero1,
+            param_shapes=model.param_shapes() if zero1 else None)
+        bspec = batch_specs(model, shape, mesh, rules)
+        out_metrics = {k: NamedSharding(mesh, P())
+                       for k in ('lr', 'grad_norm', 'loss')}
+        return dict(
+            in_shardings=(pspec, ospec, bspec),
+            out_shardings=(pspec, ospec, out_metrics),
+        )
+
+    if mesh is None:
+        return jax.jit(step), None
+
+    def jitted(shape):
+        sh = make_shardings(shape)
+        return jax.jit(step, in_shardings=sh['in_shardings'],
+                       out_shardings=sh['out_shardings'],
+                       donate_argnums=(0, 1) if donate else ())
+
+    return jitted, make_shardings
+
+
+def make_serve_step(model: Model, mesh: Optional[Mesh], shape, *, rules=None):
+    """Jitted prefill or decode step for an execution shape (dry-run + serve).
+
+    Returns (step_fn, in_shardings, out_shardings are inferred).
+    """
+    from repro.distributed.sharding import LONG_SERVE_RULES, SERVE_RULES
+    if rules is None:
+        rules = LONG_SERVE_RULES if shape.name == 'long_500k' else SERVE_RULES
+    long_ctx = shape.name == 'long_500k'
+
+    def prefill_step(params, cache, batch):
+        with axis_rules(mesh, rules):
+            return model.prefill_fn(params, cache, batch)
+
+    def decode_step(params, cache, batch):
+        with axis_rules(mesh, rules):
+            return model.decode_fn(params, cache, batch,
+                                   long_context=long_ctx)
+
+    fn = prefill_step if shape.kind == 'prefill' else decode_step
+    if mesh is None:
+        return jax.jit(fn), None
+
+    pspec = tree_spec_shaped(model.param_axes(), model.param_shapes(),
+                             rules, mesh)
+    cspec = tree_spec_shaped(model.cache_axes(shape),
+                             model.cache_shapes(shape), rules, mesh)
+    ispecs = model.input_specs(shape)
+    bspec = {k: NamedSharding(mesh, shaped_spec(ispecs[k].shape, v, rules, mesh))
+             for k, v in model.input_axes(shape).items()}
+    logits_spec = NamedSharding(
+        mesh, shaped_spec((shape.global_batch, model.cfg.vocab_size),
+                          ('batch', 'vocab'), rules, mesh))
+    jitted = jax.jit(fn, in_shardings=(pspec, cspec, bspec),
+                     out_shardings=(cspec, logits_spec),
+                     donate_argnums=(1,))
+    return jitted, dict(params=pspec, cache=cspec, batch=bspec)

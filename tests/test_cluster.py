@@ -1,0 +1,97 @@
+"""Cluster performance model (Eq. 1–2) and scheduler (§6)."""
+import numpy as np
+import pytest
+
+from repro.core.cluster.perfmodel import (
+    GPUTelemetry, NodeTelemetry, admissible, p_compute, p_memory, p_multi,
+    predict_normalized_throughput, profile_workload)
+from repro.core.cluster.scheduler import ClusterScheduler, OfflineJob
+
+
+def _gpu(busy, free_frac=0.8, horizon=100.0):
+    ts = np.linspace(0, horizon, 16)
+    free = np.full_like(ts, free_frac * 4096)
+    return GPUTelemetry(busy, ts, free, window=(0, horizon))
+
+
+def test_p_compute_idle_fraction():
+    g = _gpu([(0, 25.0), (50.0, 75.0)])
+    assert p_compute(g) == pytest.approx(0.5)
+
+
+def test_p_memory_monotone_in_free_memory():
+    w = profile_workload('w', thrput_max=100.0, m_req=2048)
+    lo = p_memory(w, _gpu([], free_frac=0.2))
+    hi = p_memory(w, _gpu([], free_frac=0.9))
+    assert hi > lo
+    assert 0.0 <= lo <= hi <= 1.0
+
+
+def test_p_memory_deficit_penalty():
+    """Dipping below M_req costs MAC_w · E[ΔM] (Eq. 2)."""
+    w = profile_workload('w', thrput_max=100.0, m_req=4000)
+    tight = p_memory(w, _gpu([], free_frac=0.5))   # 2048 < m_req
+    ample = p_memory(w, _gpu([], free_frac=1.0))
+    assert tight < ample
+
+
+def test_p_multi_alignment():
+    a = [(0, 10.0), (20.0, 30.0)]
+    aligned = [_gpu(a), _gpu(list(a))]
+    assert p_multi(aligned) == pytest.approx(1.0)
+    disjoint = [_gpu([(0, 10.0)]), _gpu([(10.0, 20.0)])]
+    assert p_multi(disjoint) == pytest.approx(0.0)
+    # partial overlap
+    part = [_gpu([(0, 10.0)]), _gpu([(5.0, 15.0)])]
+    assert p_multi(part) == pytest.approx(5.0 / 15.0)
+
+
+def test_admission_gate_requires_alignment():
+    w = profile_workload('mp', thrput_max=100.0, m_req=1024, n_gpus=2)
+    misaligned = [_gpu([(0, 10.0)]), _gpu([(40.0, 50.0)])]
+    assert not admissible(w, misaligned)
+    aligned = [_gpu([(0, 10.0)]), _gpu([(0, 10.0)])]
+    assert admissible(w, aligned)
+
+
+def test_eq1_product_form():
+    w = profile_workload('w', thrput_max=100.0, m_req=1024)
+    g = _gpu([(0, 50.0)], free_frac=0.9)
+    pred = predict_normalized_throughput(w, [g])
+    assert pred == pytest.approx(p_compute(g) * p_memory(w, g) * 1.0)
+
+
+def test_scheduler_places_on_best_node_and_evicts_violators():
+    idle = NodeTelemetry('idle', [_gpu([])])
+    busy = NodeTelemetry('busy', [_gpu([(0, 90.0)])])
+    sched = ClusterScheduler([busy, idle])
+    job = OfflineJob(profile_workload('j', thrput_max=10.0, m_req=1024),
+                     sla=0.3)
+    p = sched.place(job)
+    assert p is not None and p.node == 'idle'
+    # persistent SLA violation → eviction + requeue
+    for _ in range(3):
+        sched.report_throughput(job.job_id, achieved_norm=0.1)
+    assert sched.evictions == 1
+    assert job in sched.pending
+    assert job.job_id not in sched.placements
+
+
+def test_scheduler_queues_unplaceable_jobs():
+    busy = NodeTelemetry('busy', [_gpu([(0, 99.0)])])
+    sched = ClusterScheduler([busy])
+    job = OfflineJob(profile_workload('j', thrput_max=10.0, m_req=1024),
+                     sla=0.9)
+    assert sched.place(job) is None
+    assert job in sched.pending
+
+
+def test_scheduler_no_double_booking():
+    node = NodeTelemetry('n', [_gpu([]), _gpu([])])
+    sched = ClusterScheduler([node])
+    j1 = OfflineJob(profile_workload('a', thrput_max=10, m_req=512), 0.3)
+    j2 = OfflineJob(profile_workload('b', thrput_max=10, m_req=512), 0.3)
+    j3 = OfflineJob(profile_workload('c', thrput_max=10, m_req=512), 0.3)
+    p1, p2 = sched.place(j1), sched.place(j2)
+    assert p1.gpu_indices != p2.gpu_indices
+    assert sched.place(j3) is None      # node full

@@ -1,0 +1,242 @@
+"""Distributed behaviour under a multi-device CPU mesh.
+
+jax locks the device count at first init, so each scenario runs in a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def _run(code: str, devices: int = 8, timeout: int = 420) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f'--xla_force_host_platform_device_count={devices}',
+               PYTHONPATH='src')
+    proc = subprocess.run([sys.executable, '-c', textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env, cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return proc.stdout
+
+
+def test_train_step_sharded_matches_meshless():
+    out = _run('''
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.configs import get_config, reduced
+        from repro.configs.base import ShapeConfig
+        from repro.models.api import build_model
+        from repro.training import optimizer as opt
+        from repro.training.train_step import make_train_step
+        from repro.training.data import DataConfig, batch_at
+
+        mesh = jax.make_mesh((4, 2), ('data', 'model'))
+        cfg = reduced(get_config('qwen3-0.6b'))
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        ostate = opt.init_opt_state(params)
+        dcfg = DataConfig(seq_len=32, global_batch=8, vocab_size=cfg.vocab_size)
+        batch = jax.tree.map(jnp.asarray, batch_at(dcfg, 0))
+
+        sb, _ = make_train_step(model, mesh, zero1=True)
+        step = sb(ShapeConfig('t', 32, 8, 'train'))
+        p1, s1, m1 = step(params, ostate, batch)
+
+        step0, _ = make_train_step(model, None)
+        p0, s0, m0 = step0(model.init_params(jax.random.PRNGKey(0)),
+                           opt.init_opt_state(params), batch)
+        print('sharded', float(m1['loss']), 'meshless', float(m0['loss']))
+        np.testing.assert_allclose(float(m1['loss']), float(m0['loss']),
+                                   rtol=2e-2)
+        # params agree after one step (bf16 tolerance)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p0)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=5e-2, atol=5e-2)
+        print('OK')
+    ''')
+    assert 'OK' in out
+
+
+def test_zero1_moments_sharded_over_data():
+    out = _run('''
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.configs import get_config, reduced
+        from repro.models.api import build_model
+        from repro.training import optimizer as opt
+        from repro.training.train_step import param_specs
+
+        mesh = jax.make_mesh((4, 2), ('data', 'model'))
+        cfg = reduced(get_config('internlm2-1.8b'), d_model=64, d_ff=256)
+        model = build_model(cfg)
+        pspec = param_specs(model, mesh)
+        ospec = opt.opt_state_specs(pspec, mesh, zero1=True,
+                                    param_shapes=model.param_shapes())
+        # at least one moment leaf picked up the data axis
+        has_data = any('data' in str(s.spec)
+                       for s in jax.tree.leaves(ospec['mu']))
+        assert has_data, [str(s.spec) for s in jax.tree.leaves(ospec['mu'])][:5]
+        print('OK')
+    ''')
+    assert 'OK' in out
+
+
+def test_compressed_allreduce_matches_mean():
+    out = _run('''
+        import jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.training.compression import (init_error_state,
+                                                make_compressed_allreduce)
+        mesh = jax.make_mesh((8,), ('data',))
+        rng = np.random.default_rng(0)
+        # global (8, 64) sharded over data: row i is device i's local grad
+        g_global = rng.normal(size=(8, 64)).astype(np.float32)
+        sharding = NamedSharding(mesh, P('data', None))
+        reduce_fn = make_compressed_allreduce(mesh, {'w': P('data', None)},
+                                              ('data',))
+        grads = {'w': jax.device_put(g_global, sharding)}
+        err = {'w': jax.device_put(jnp.zeros((8, 64), jnp.float32), sharding)}
+        out, new_err = reduce_fn(grads, err)
+        want = g_global.mean(axis=0)
+        got = np.asarray(out['w'])[0]    # every shard holds the mean
+        rel = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+        print('rel err', rel)
+        # int8 with 1/8 sum headroom leaves ~4 bits/element: coarse on one
+        # round — error feedback is what makes it converge across rounds
+        assert rel < 0.15, rel
+        # error feedback: applying the residual next round recovers precision
+        out2, _ = reduce_fn(jax.tree.map(jnp.zeros_like, grads), new_err)
+        got2 = got + np.asarray(out2['w'])[0]
+        rel2 = np.abs(got2 - want).max() / (np.abs(want).max() + 1e-9)
+        print('rel err with feedback', rel2)
+        assert rel2 < rel
+        print('OK')
+    ''')
+    assert 'OK' in out
+
+
+def test_checkpoint_elastic_reshard():
+    out = _run('''
+        import jax, numpy as np, jax.numpy as jnp, tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.training import checkpoint as ckpt
+
+        mesh_a = jax.make_mesh((4, 2), ('data', 'model'))
+        x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+        xa = jax.device_put(x, NamedSharding(mesh_a, P('data', 'model')))
+        d = tempfile.mkdtemp()
+        ckpt.save(d, 1, {'x': xa})
+
+        # "lose a host": restore under a smaller (2, 2) mesh
+        devs = np.asarray(jax.devices()[:4]).reshape(2, 2)
+        mesh_b = jax.sharding.Mesh(devs, ('data', 'model'))
+        target = {'x': jnp.zeros((8, 8), jnp.float32)}
+        sh = {'x': NamedSharding(mesh_b, P('data', 'model'))}
+        restored, step = ckpt.restore(d, 1, target, shardings=sh)
+        np.testing.assert_array_equal(np.asarray(restored['x']), np.asarray(x))
+        assert restored['x'].sharding.mesh.shape['data'] == 2
+        print('OK')
+    ''')
+    assert 'OK' in out
+
+
+def test_elastic_failover_end_to_end():
+    """DESIGN.md §6: train on a (4, 2) mesh, checkpoint, 'lose a host',
+    re-mesh to (2, 2) via plan_recovery, restore, and continue — the loss
+    trajectory must match the unbroken run (data is step-pure)."""
+    out = _run('''
+        import jax, numpy as np, jax.numpy as jnp, tempfile
+        from repro.configs import get_config, reduced
+        from repro.configs.base import ShapeConfig
+        from repro.models.api import build_model
+        from repro.training import checkpoint as ckpt, optimizer as opt
+        from repro.training.data import DataConfig, batch_at
+        from repro.training.fault_tolerance import (
+            HeartbeatConfig, HeartbeatMonitor, plan_recovery)
+        from repro.training.train_step import make_train_step
+
+        cfg = reduced(get_config('qwen3-0.6b'))
+        model = build_model(cfg)
+        dcfg = DataConfig(seq_len=32, global_batch=8,
+                          vocab_size=cfg.vocab_size)
+        shape = ShapeConfig('t', 32, 8, 'train')
+        ocfg = opt.AdamWConfig(lr=3e-3, warmup_steps=1)
+
+        def run_steps(step_fn, params, state, lo, hi):
+            losses = []
+            for s in range(lo, hi):
+                batch = jax.tree.map(jnp.asarray, batch_at(dcfg, s))
+                params, state, m = step_fn(params, state, batch)
+                losses.append(float(m['loss']))
+            return params, state, losses
+
+        # unbroken reference on the full mesh
+        mesh_a = jax.make_mesh((4, 2), ('data', 'model'))
+        sb, _ = make_train_step(model, mesh_a, opt_cfg=ocfg, donate=False)
+        step_a = sb(shape)
+        p0 = model.init_params(jax.random.PRNGKey(0))
+        s0 = opt.init_opt_state(p0)
+        _, _, ref = run_steps(step_a, p0, s0, 0, 6)
+
+        # broken run: 3 steps, checkpoint, host dies
+        p, s = model.init_params(jax.random.PRNGKey(0)), None
+        s = opt.init_opt_state(p)
+        p, s, l1 = run_steps(step_a, p, s, 0, 3)
+        d = tempfile.mkdtemp()
+        ckpt.save(d, 3, {'params': p, 'opt': s})
+
+        mon = HeartbeatMonitor(['h0', 'h1'],
+                               HeartbeatConfig(interval_s=1, miss_threshold=2))
+        mon.beat('h0', 10.0)            # h1 silent → dead
+        plan = plan_recovery(mon, devices_per_host=4, model_parallel=2,
+                             last_ckpt_step=ckpt.latest_step(d),
+                             old_shape=(4, 2), now=10.0)
+        assert plan is not None and plan.new_shape == (2, 2), plan
+
+        devs = np.asarray(jax.devices()[:4]).reshape(2, 2)
+        mesh_b = jax.sharding.Mesh(devs, ('data', 'model'))
+        sb_b, make_sh = make_train_step(model, mesh_b, opt_cfg=ocfg,
+                                        donate=False)
+        sh = make_sh(shape)['in_shardings']
+        target = {'params': model.init_params(jax.random.PRNGKey(1)),
+                  'opt': opt.init_opt_state(p0)}
+        restored, step = ckpt.restore(
+            d, plan.restore_step, target,
+            shardings={'params': sh[0], 'opt': sh[1]})
+        step_b = sb_b(shape)
+        _, _, l2 = run_steps(step_b, restored['params'], restored['opt'],
+                             step, 6)
+        got = l1 + l2
+        print('ref', ref)
+        print('got', got)
+        np.testing.assert_allclose(got, ref, rtol=3e-2, atol=3e-2)
+        print('OK')
+    ''')
+    assert 'OK' in out
+
+
+def test_serve_step_lowers_on_small_mesh():
+    """A miniature dry-run: decode step lowers+compiles on a (2,4) mesh."""
+    out = _run('''
+        import jax
+        from repro.configs import get_config, SHAPES
+        from repro.models.api import build_model
+        from repro.training.train_step import make_serve_step
+        from repro.configs.base import ShapeConfig
+
+        mesh = jax.make_mesh((2, 4), ('data', 'model'))
+        cfg = get_config('qwen3-0.6b')
+        model = build_model(cfg)
+        shape = ShapeConfig('decode_small', 2048, 8, 'decode')
+        jitted, _ = make_serve_step(model, mesh, shape)
+        lowered = jitted.lower(model.param_shapes(),
+                               model.cache_shapes(shape),
+                               model.input_specs(shape))
+        compiled = lowered.compile()
+        print('flops', compiled.cost_analysis()['flops'] > 0)
+        print('OK')
+    ''')
+    assert 'OK' in out

@@ -1,0 +1,147 @@
+"""Engine integration: continuous batching, chunked prefill correctness,
+Valve invalidation → recompute round trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.clock import VirtualClock
+from repro.core.runtime import RuntimeConfig, ValveRuntime
+from repro.models.api import build_model
+from repro.serving.engine import Engine, EngineConfig, ReqState
+from repro.serving.kvpool import KVPool
+
+
+def _setup(arch='internlm2-1.8b', *, pool_handles=8, pph=4, page=4,
+           engine_cfg=None, runtime=False, seed=0):
+    cfg = reduced(get_config(arch), page_size=page)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    pool = KVPool(pool_handles, pph, page_size=page, reserved_handles=1)
+    clock = VirtualClock()
+    rt = None
+    if runtime:
+        def cb(inv):
+            eng.on_pages_invalidated(inv)
+        rt = ValveRuntime(pool, RuntimeConfig(), clock=clock, on_invalidate=cb)
+    ecfg = engine_cfg or EngineConfig(max_batch=4, max_seq=64,
+                                      prefill_chunk=8)
+    eng = Engine(model, params, pool, ecfg, runtime=rt, clock=clock)
+    return eng, rt, pool, model, params
+
+
+def test_generate_matches_unchunked_prefill():
+    """Greedy generation via chunked prefill + paged decode must equal the
+    model's own full-prefill + decode loop."""
+    eng, _, pool, model, params = _setup()
+    cfg = model.cfg
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, cfg.vocab_size, size=13).tolist()  # odd length
+    rid = eng.submit(prompt, max_new_tokens=6)
+    eng.run_to_completion()
+    got = eng.output_tokens(rid)
+    assert len(got) == 6
+
+    # oracle: full prefill (page-aligned prompt slice) + decode loop on a
+    # fresh region cache
+    from repro.configs.base import ShapeConfig
+    total = len(prompt) + 6
+    region_tokens = ((total + cfg.page_size - 1) // cfg.page_size
+                     ) * cfg.page_size
+    shape = ShapeConfig('t', region_tokens, 1, 'prefill')
+    cache = model.init_cache(shape)
+    maxp = region_tokens // cfg.page_size
+    pt = jnp.arange(1, maxp + 1, dtype=jnp.int32)[None]
+    # token-granular prefill via the same chunk fn but one token at a time is
+    # slow; instead decode the prompt token-by-token after a 1-token "prefill"
+    toks = []
+    logits = None
+    ctx = list(prompt)
+    # simple oracle: feed every token through decode_step sequentially
+    for pos, tok in enumerate(ctx):
+        db = {'tokens': jnp.asarray([tok], jnp.int32),
+              'positions': jnp.asarray([pos], jnp.int32),
+              'page_table': pt}
+        cache, logits = jax.jit(model.decode_fn)(params, cache, db)
+    for i in range(6):
+        tok = int(jnp.argmax(logits, -1)[0])
+        toks.append(tok)
+        if i == 5:
+            break
+        db = {'tokens': jnp.asarray([tok], jnp.int32),
+              'positions': jnp.asarray([len(prompt) + i], jnp.int32),
+              'page_table': pt}
+        cache, logits = jax.jit(model.decode_fn)(params, cache, db)
+    assert got == toks, (got, toks)
+
+
+def test_continuous_batching_two_requests():
+    eng, _, pool, model, _ = _setup()
+    cfg = model.cfg
+    rng = np.random.default_rng(1)
+    r1 = eng.submit(rng.integers(1, cfg.vocab_size, size=8).tolist(), 5)
+    r2 = eng.submit(rng.integers(1, cfg.vocab_size, size=11).tolist(), 7)
+    eng.run_to_completion()
+    assert len(eng.output_tokens(r1)) == 5
+    assert len(eng.output_tokens(r2)) == 7
+    pool.check_invariants()
+    assert pool.used_pages_for('offline') == 0  # all freed on finish
+
+
+def test_invalidation_recompute_round_trip():
+    """Reclaim mid-generation; the engine must recompute and the final output
+    must be identical to an undisturbed run (greedy determinism)."""
+    eng, _, pool, model, params = _setup(pool_handles=10)
+    cfg = model.cfg
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(1, cfg.vocab_size, size=9).tolist()
+
+    # undisturbed reference
+    ref_rid = eng.submit(prompt, max_new_tokens=8)
+    eng.run_to_completion()
+    ref = eng.output_tokens(ref_rid)
+
+    # fresh engine; interrupt after a few decode steps
+    eng2, _, pool2, model2, _ = _setup(pool_handles=10, seed=0)
+    rid = eng2.submit(prompt, max_new_tokens=8)
+    for _ in range(20):
+        eng2.step()
+        req = eng2.requests[rid]
+        if len(req.generated) >= 3:
+            break
+    # reclaim every handle that holds this request's pages (simulating the
+    # runtime's compute-first reclamation; gates are a no-op here)
+    handles = sorted({pool2.handle_of(p) for p in req.pages})
+    inv = pool2.reclaim_handles(handles)
+    assert rid in inv
+    eng2.on_pages_invalidated(inv)
+    assert eng2.requests[rid].state == ReqState.WAITING
+    assert eng2.requests[rid].recomputes == 1
+    kept = list(eng2.requests[rid].generated)
+    eng2.run_to_completion()
+    out = eng2.output_tokens(rid)
+    assert out[: len(kept)] == kept          # kept tokens never regenerate
+    assert out == ref, (out, ref)            # recompute is exact
+    pool2.check_invariants()
+
+
+def test_runtime_gating_blocks_offline():
+    eng, rt, pool, model, _ = _setup(runtime=True)
+    cfg = model.cfg
+    rng = np.random.default_rng(3)
+    eng.submit(rng.integers(1, cfg.vocab_size, size=8).tolist(), 4)
+    # an online request arrives → gates close → offline cannot dispatch
+    rt.on_online_request_start('online-0')
+    assert not rt.offline_may_dispatch()
+    assert eng.step() is False
+    assert eng.stats.blocked_dispatches == 1
+    # online finishes; wake only after T_cool of continuous idle
+    rt.on_online_request_end('online-0')
+    rt.tick()
+    assert not rt.offline_may_dispatch()     # still inside cooldown
+    rt.clock.advance(rt.lifecycle.t_cool + 1e-3)
+    rt.tick()
+    assert rt.offline_may_dispatch()
+    assert eng.step() is True
+    rt.check_invariants()

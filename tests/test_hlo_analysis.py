@@ -1,0 +1,87 @@
+"""HLO text analyzer: trip-count multipliers, collective accounting,
+dot FLOPs, slice-aware traffic."""
+import pytest
+
+from repro.launch import hlo_analysis as ha
+
+MODULE = '''
+HloModule test
+
+%body (p: (s32[], f32[128,64])) -> (s32[], f32[128,64]) {
+  %p = (s32[], f32[128,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,64] get-tuple-element(%p), index=1
+  %w = f32[64,64] constant({...})
+  %dot.1 = f32[128,64] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,64] all-reduce(%dot.1), replica_groups=[16,16]<=[256], to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,64]) tuple(%ni, %ar)
+}
+
+%cond (p2: (s32[], f32[128,64])) -> pred[] {
+  %p2 = (s32[], f32[128,64]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i2, %c), direction=LT
+}
+
+ENTRY %main (a: f32[128,64]) -> f32[128,64] {
+  %a = f32[128,64] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[128,64]) tuple(%zero, %a)
+  %w2 = (s32[], f32[128,64]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"},"other":1}
+  ROOT %out = f32[128,64] get-tuple-element(%w2), index=1
+}
+'''
+
+
+def test_trip_count_multiplies_costs():
+    costs = ha.analyze(MODULE)
+    # dot: 2 × 128×64 × 64 = 1,048,576 per iteration × 10
+    assert costs.flops == pytest.approx(10 * 2 * 128 * 64 * 64)
+    # all-reduce payload: 128×64×4 bytes × 10 iterations
+    assert costs.coll_payload['all-reduce'] == pytest.approx(
+        10 * 128 * 64 * 4)
+    # ring wire factor 2(n-1)/n with group size 16
+    assert costs.coll_wire == pytest.approx(
+        10 * 128 * 64 * 4 * 2 * 15 / 16)
+    assert costs.coll_count == 10
+
+
+def test_type_bytes_tuple_with_comments():
+    t = '(s32[], bf16[2,3]{1,0}, /*index=5*/f32[4])'
+    assert ha.type_bytes(t) == 4 + 2 * 3 * 2 + 4 * 4
+
+
+def test_wire_factor():
+    assert ha.wire_factor('all-reduce', 2) == pytest.approx(1.0)
+    assert ha.wire_factor('all-gather', 4) == pytest.approx(0.75)
+    assert ha.wire_factor('collective-permute', 8) == 1.0
+    assert ha.wire_factor('all-reduce', 1) == 0.0
+
+
+FUSION_MODULE = '''
+HloModule f
+
+%fused_computation (param_0: f32[32,128,64], param_1: s32[]) -> f32[1,128,64] {
+  %param_0 = f32[32,128,64] parameter(0)
+  %param_1 = s32[] parameter(1)
+  %z = s32[] constant(0)
+  ROOT %ds = f32[1,128,64] dynamic-slice(%param_0, %param_1, %z, %z), dynamic_slice_sizes={1,128,64}
+}
+
+ENTRY %main (stack: f32[32,128,64], idx: s32[]) -> f32[1,128,64] {
+  %stack = f32[32,128,64] parameter(0)
+  %idx = s32[] parameter(1)
+  ROOT %fu = f32[1,128,64] fusion(%stack, %idx), kind=kLoop, calls=%fused_computation
+}
+'''
+
+
+def test_fusion_slice_aware_traffic():
+    costs = ha.analyze(FUSION_MODULE)
+    slice_bytes = 1 * 128 * 64 * 4
+    # read the slice region (NOT the 32× stack) + write the result
+    # (+4 bytes for the scalar index parameter)
+    assert costs.traffic_bytes == pytest.approx(2 * slice_bytes + 4)

@@ -1,0 +1,90 @@
+"""Paged-attention kernel vs oracle: shape/dtype sweeps, quarantine-page
+masking, ragged lengths — in interpret mode (CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+CASES = [
+    # (B, Hq, Hkv, D, pg, maxp, dtype)
+    (2, 4, 4, 64, 16, 4, jnp.float32),
+    (2, 8, 2, 64, 16, 8, jnp.float32),
+    (1, 16, 8, 128, 16, 4, jnp.bfloat16),
+    (3, 4, 1, 32, 8, 5, jnp.float32),
+    (2, 4, 2, 64, 4, 16, jnp.float32),
+]
+
+
+def _setup(case, seed=0):
+    b, hq, hkv, d, pg, maxp, dtype = case
+    rng = np.random.default_rng(seed)
+    n_pages = b * maxp + 1
+    q = jnp.asarray(rng.normal(size=(b, hq, d)) * 0.5, dtype)
+    pk = jnp.asarray(rng.normal(size=(n_pages, pg, hkv, d)) * 0.5, dtype)
+    pv = jnp.asarray(rng.normal(size=(n_pages, pg, hkv, d)) * 0.5, dtype)
+    # each request owns a scattered set of pages (1..), like the real pool
+    perm = rng.permutation(n_pages - 1) + 1
+    pt = jnp.asarray(perm[: b * maxp].reshape(b, maxp), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, maxp * pg + 1, size=b), jnp.int32)
+    return q, pk, pv, pt, lengths
+
+
+@pytest.mark.parametrize('case', CASES)
+def test_paged_matches_ref(case):
+    q, pk, pv, pt, lengths = _setup(case, seed=hash(case) % 2**32)
+    out = paged_attention(q, pk, pv, pt, lengths, interpret=True)
+    ref = paged_attention_ref(q, pk, pv, pt, lengths)
+    tol = 3e-2 if q.dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_quarantined_pages_are_harmless_when_masked():
+    """Remapping pages past a request's length to quarantine (page 0) must
+    not change its output — the Valve no-fault contract for healthy
+    requests."""
+    case = (2, 4, 2, 64, 8, 6, jnp.float32)
+    q, pk, pv, pt, _ = _setup(case, seed=7)
+    pg, maxp = 8, 6
+    lengths = jnp.asarray([3 * pg, 2 * pg], jnp.int32)  # use 3 / 2 pages
+    base = paged_attention(q, pk, pv, pt, lengths, interpret=True)
+    pt_reclaimed = np.asarray(pt).copy()
+    pt_reclaimed[0, 3:] = 0   # quarantine the unused tail
+    pt_reclaimed[1, 2:] = 0
+    out = paged_attention(q, pk, pv, jnp.asarray(pt_reclaimed), lengths,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_paged_vs_dense_attention():
+    """Paged read path must equal dense attention over the same tokens."""
+    from repro.models import common as cm
+    b, hq, hkv, d, pg, maxp = 2, 8, 4, 64, 4, 8
+    rng = np.random.default_rng(3)
+    s = maxp * pg
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, d)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, d)) * 0.5, jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, hq, d)) * 0.5, jnp.float32)
+    lengths = jnp.asarray([s, s - 5], jnp.int32)
+
+    # pack into a pool: page p of request r → physical 1 + r*maxp + p
+    pool_k = jnp.zeros((1 + b * maxp, pg, hkv, d), jnp.float32)
+    pool_v = jnp.zeros_like(pool_k)
+    pool_k = pool_k.at[1:].set(
+        k.reshape(b, maxp, pg, hkv, d).reshape(b * maxp, pg, hkv, d))
+    pool_v = pool_v.at[1:].set(
+        v.reshape(b, maxp, pg, hkv, d).reshape(b * maxp, pg, hkv, d))
+    pt = jnp.arange(1, 1 + b * maxp, dtype=jnp.int32).reshape(b, maxp)
+
+    out = paged_attention(q, pool_k, pool_v, pt, lengths, interpret=True)
+    kv_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    ref = cm.attention(q[:, None], k, v,
+                       q_positions=lengths[:, None], kv_positions=kv_pos,
+                       kv_valid=kv_pos < lengths[:, None], causal=False)[:, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,22 @@
+"""Paper Table 1 deployability claim: the framework-side integration is a
+single callback under 20 lines of code."""
+import re
+
+
+def test_engine_patch_under_20_loc():
+    src = open('src/repro/serving/engine.py').read()
+    m = re.search(r'# >>> VALVE-PATCH-BEGIN\n(.*?)# >>> VALVE-PATCH-END',
+                  src, re.S)
+    assert m, 'patch markers missing'
+    lines = [l for l in m.group(1).splitlines()
+             if l.strip() and not l.strip().startswith('#')]
+    assert 0 < len(lines) < 20, f'patch is {len(lines)} LOC (paper: <20)'
+
+
+def test_patch_is_single_callback():
+    """The entire integration surface is one method the runtime calls."""
+    src = open('src/repro/serving/engine.py').read()
+    m = re.search(r'# >>> VALVE-PATCH-BEGIN\n(.*?)# >>> VALVE-PATCH-END',
+                  src, re.S)
+    defs = re.findall(r'def (\w+)', m.group(1))
+    assert defs == ['on_pages_invalidated']

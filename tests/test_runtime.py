@@ -1,0 +1,112 @@
+"""ValveRuntime invariants: compute-first ordering, at-most-one preemption
+per online request, T_cool wake gating, reservation maintenance."""
+import pytest
+
+from repro.core.clock import VirtualClock
+from repro.core.miad import MIADConfig
+from repro.core.reclamation import ReclamationController
+from repro.core.runtime import RuntimeConfig, ValveRuntime
+from repro.serving.kvpool import KVPool
+
+
+def _rt(n_handles=8, pph=4, **kw):
+    pool = KVPool(n_handles, pph, reserved_handles=1)
+    clock = VirtualClock()
+    rt = ValveRuntime(pool, RuntimeConfig(**kw), clock=clock)
+    return rt, pool, clock
+
+
+def test_ordering_violation_raises():
+    pool = KVPool(4, 4, reserved_handles=1)
+    rc = ReclamationController(pool, gate_is_closed=lambda: False)
+    pool.alloc('off', 4, 'offline')
+    with pytest.raises(RuntimeError):
+        rc.reclaim(1, now=0.0)
+    assert rc.stats.ordering_violations == 1
+
+
+def test_reclaim_requires_gates_closed_and_runtime_closes_them():
+    rt, pool, clock = _rt()
+    pool.alloc('off-1', 10, 'offline')
+    assert rt.offline_may_dispatch()
+    got = rt.alloc_online('on-1', 8)      # 8 > 1 reserved handle of 4 pages
+    assert got is not None
+    assert rt.reclaimer.stats.reclamations == 1
+    assert rt.reclaimer.stats.ordering_violations == 0
+    rt.check_invariants()
+
+
+def test_at_most_one_preemption_per_request():
+    rt, pool, clock = _rt()
+    pool.alloc('off', 4, 'offline')
+    for i in range(5):
+        rid = f'on-{i}'
+        rt.on_online_request_start(rid)
+        for _ in range(3):
+            rt.on_online_iteration_start()
+            clock.advance(0.03)
+            rt.on_online_iteration_end()
+            clock.advance(0.002)        # decode gap — offline must NOT wake
+            rt.tick()
+            assert not rt.offline_may_dispatch()
+        rt.on_online_request_end(rid)
+        clock.advance(rt.lifecycle.t_cool + 1e-3)
+        rt.tick()                        # wake after cooldown
+        assert rt.offline_may_dispatch()
+    rt.check_invariants()                # asserts ≤1 preemption per request
+    assert rt.stats.compute_preemptions == 5
+    assert rt.stats.offline_wakeups == 5
+
+
+def test_overlapping_requests_single_preemption():
+    rt, pool, clock = _rt()
+    rt.on_online_request_start('a')      # preempts offline (gates open)
+    rt.on_online_request_start('b')      # gates already closed: no preempt
+    clock.advance(0.1)
+    rt.on_online_request_end('a')
+    rt.on_online_request_end('b')
+    assert rt.stats.compute_preemptions == 1
+    rt.check_invariants()
+
+
+def test_memory_pressure_mid_request_does_not_double_preempt():
+    rt, pool, clock = _rt()
+    pool.alloc('off', 16, 'offline')
+    rt.on_online_request_start('a')      # preemption #1
+    # memory pressure while gates already closed → reclaim without preempt
+    rt.alloc_online('a', 12)
+    assert rt.stats.compute_preemptions == 1
+    assert rt.reclaimer.stats.reclamations >= 1
+    rt.check_invariants()
+
+
+def test_miad_reservation_grows_and_shrinks():
+    # long T so the growth phase isn't immediately released
+    rt, pool, clock = _rt(miad=MIADConfig(alpha=2.0, t_init=100.0,
+                                          t_min=1.0, t_step=10.0,
+                                          target_rate=10.0))
+    # online fills the reservation → pressure → H grows
+    rt.alloc_online('a', 4)
+    for _ in range(4):
+        clock.advance(0.3)
+        rt.tick()
+    assert len(pool.reserved) > 1
+    # release: free the online pages, let T decay and MIAD shrink
+    rt.free_online('a')
+    for _ in range(200):
+        clock.advance(1.0)
+        rt.tick()
+    assert len(pool.reserved) == 1
+    rt.check_invariants()
+
+
+def test_gate_fanout_faster_than_serial():
+    from repro.core.gate import DeviceGate, GateGroup
+    serial = GateGroup([DeviceGate(i, 1e-3) for i in range(8)], 'serial')
+    fanout = GateGroup([DeviceGate(i, 1e-3) for i in range(8)], 'fanout')
+    fanout.enable_all()                 # warm the thread pool
+    ts = min(serial.disable_all(), serial.disable_all())
+    tf = min(fanout.disable_all(), fanout.disable_all())
+    assert ts > 3 * tf                  # O(n) vs O(1): ~8 ms vs ~1 ms
+    serial.close()
+    fanout.close()

@@ -1,0 +1,64 @@
+"""Shape-aware spec resolution: jit arguments must always divide evenly."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import (TRAIN_RULES, SERVE_RULES,
+                                        logical_to_spec, shaped_spec)
+
+
+@pytest.fixture(scope='module')
+def mesh():
+    devs = np.asarray(jax.devices()[:1] * 4).reshape(2, 2)
+    return Mesh(devs, ('data', 'model'))
+
+
+def _axis_sizes(mesh, part):
+    if part is None:
+        return 1
+    parts = (part,) if isinstance(part, str) else part
+    n = 1
+    for p in parts:
+        n *= mesh.shape[p]
+    return n
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.lists(st.sampled_from(
+    [(8, 'batch'), (40, 'heads'), (8, 'kv_heads'), (128, 'head_dim'),
+     (17, 'vocab'), (64, 'ffn'), (3, None), (256, 'embed'), (6, 'seq')]),
+    min_size=1, max_size=4))
+def test_shaped_spec_always_divides(mesh, dims):
+    shape = tuple(d for d, _ in dims)
+    axes = tuple(a for _, a in dims)
+    spec = shaped_spec(shape, axes, TRAIN_RULES, mesh)
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for dim, part in zip(shape, parts):
+        assert dim % _axis_sizes(mesh, part) == 0, (shape, axes, spec)
+
+
+def test_shaped_spec_relocates_dropped_axis(mesh):
+    # kv_heads=3 can't take model(2); head_dim=128 can
+    spec = shaped_spec((4, 3, 128), ('batch', 'kv_heads', 'head_dim'),
+                       SERVE_RULES, mesh)
+    assert spec == P('data', None, 'model')
+
+
+def test_shaped_spec_keeps_divisible_mapping(mesh):
+    spec = shaped_spec((4, 8, 128), ('batch', 'kv_heads', 'head_dim'),
+                       SERVE_RULES, mesh)
+    assert spec == P('data', 'model')   # trailing None trimmed
+
+
+def test_shaped_spec_partial_tuple(mesh):
+    # batch maps to ('pod','data') — pod absent in this mesh, data kept
+    spec = shaped_spec((6, 10), ('batch', None), TRAIN_RULES, mesh)
+    assert spec == P('data')
+
+
+def test_logical_to_spec_drops_missing_axes(mesh):
+    spec = logical_to_spec(('batch', 'heads'), TRAIN_RULES, mesh)
+    assert spec == P('data', 'model')

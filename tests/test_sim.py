@@ -1,0 +1,77 @@
+"""Colocation-simulator invariants (the §7.2 reproduction substrate)."""
+import numpy as np
+import pytest
+
+from repro.core.sim.colocation import (NodeSim, SimConfig,
+                                       run_offline_standalone,
+                                       run_online_standalone, run_strategy)
+from repro.core.sim.strategies import Channel, OurMem, Prism
+from repro.core.sim.workload import make_workload_pairs
+
+CFG = SimConfig()
+PAIRS = make_workload_pairs(4, horizon_s=120.0)
+
+
+def test_every_online_request_completes():
+    for pair in PAIRS[:2]:
+        r = run_strategy(pair, 'Channel', 'OurMem', CFG)
+        assert set(r.ttft) == {q.req_id for q in pair.online.requests}
+
+
+def test_valve_at_most_one_preemption_per_request():
+    for pair in PAIRS[:2]:
+        r = run_strategy(pair, 'Channel', 'OurMem', CFG)
+        assert r.max_preempt_per_request <= 1
+
+
+def test_baselines_preempt_frequently():
+    r = run_strategy(PAIRS[0], 'GPreempt', 'UVM', CFG)
+    assert r.max_preempt_per_request > 1
+
+
+def test_valve_interference_below_paper_bounds():
+    """Aggregate across pairs: <5% TTFT and <2% TPOT increase."""
+    tt_all, tp_all = [], []
+    for pair in PAIRS:
+        base = run_online_standalone(pair, CFG)
+        r = run_strategy(pair, 'Channel', 'OurMem', CFG)
+        tt_all += [(r.ttft[k] - base.ttft[k]) / max(base.ttft[k], 1e-9)
+                   for k in base.ttft]
+        tp_all += [(r.tpot[k] - base.tpot[k]) / max(base.tpot[k], 1e-9)
+                   for k in base.tpot]
+    assert np.mean(tt_all) * 100 < 5.0
+    assert np.mean(tp_all) * 100 < 2.0
+
+
+def test_valve_never_kills_offline_requests():
+    r = run_strategy(PAIRS[0], 'Channel', 'OurMem', CFG)
+    assert r.mem_stats.offline_kills == 0
+    assert r.offline_tokens_wasted == 0
+
+
+def test_uvm_kills_offline_on_memory_bursts():
+    r = run_strategy(PAIRS[0], 'Channel', 'UVM', CFG)   # memory-bursty pair
+    assert r.mem_stats.offline_kills > 0
+
+
+def test_offline_standalone_upper_bounds_colocated():
+    pair = PAIRS[1]
+    solo = run_offline_standalone(pair, CFG)
+    for cpn, mpn in (('Channel', 'OurMem'), ('Channel', 'Prism')):
+        r = run_strategy(pair, cpn, mpn, CFG)
+        assert r.offline_throughput <= solo.offline_throughput * 1.001
+
+
+def test_valve_eviction_recompute_not_worse_than_fifo():
+    pair = PAIRS[0]
+    rv = run_strategy(pair, 'Channel', 'OurMem', CFG, eviction_policy='valve')
+    rf = run_strategy(pair, 'Channel', 'OurMem', CFG, eviction_policy='fifo')
+    assert rv.recompute_tokens <= rf.recompute_tokens * 1.05
+
+
+def test_ourmem_pool_invariants_after_run():
+    pair = PAIRS[0]
+    mp = OurMem(CFG.total_pages, CFG.page_tokens)
+    NodeSim(pair, Channel(), mp, CFG).run()
+    mp.pool.check_invariants()
+    assert mp.reclaimer.stats.ordering_violations == 0

@@ -1,0 +1,228 @@
+"""Unit + property tests for the Valve core mechanisms: pool invariants,
+Algorithm 1, MIAD, lifecycle."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import eviction
+from repro.core.lifecycle import OnlineLifecycleTracker
+from repro.core.miad import MIADConfig, MIADReservation
+from repro.serving.kvpool import KVPool, QUARANTINE_PAGE
+
+
+# ---------------------------------------------------------------------------
+# KVPool
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(['alloc_on', 'alloc_off', 'free',
+                                           'reclaim', 'reserve', 'release']),
+                          st.integers(0, 30)), min_size=1, max_size=60))
+def test_pool_invariants_random_ops(ops):
+    """Pool invariants hold under arbitrary op sequences: no double-owned
+    page, quarantine never owned, free lists consistent."""
+    pool = KVPool(n_handles=6, pages_per_handle=4, reserved_handles=2)
+    live = []
+    for i, (op, arg) in enumerate(ops):
+        if op in ('alloc_on', 'alloc_off'):
+            rid = f'r{i}'
+            got = pool.alloc(rid, (arg % 6) + 1,
+                             'online' if op == 'alloc_on' else 'offline')
+            if got is not None:
+                live.append(rid)
+        elif op == 'free' and live:
+            pool.free(live.pop(arg % len(live)))
+        elif op == 'reclaim':
+            offl = pool.offline_handles()
+            if offl:
+                victims = [offl[arg % len(offl)]]
+                inv = pool.reclaim_handles(victims)
+                for r in inv:
+                    if r in live:
+                        live.remove(r)
+        elif op == 'reserve':
+            empt = pool.empty_offline_handles()
+            if empt:
+                pool.reserve_handle(empt[arg % len(empt)])
+        elif op == 'release':
+            pool.release_reserved_handle()
+        pool.check_invariants()
+    assert pool.owner[QUARANTINE_PAGE] is None
+
+
+def test_pool_reclaim_frees_whole_victim_request():
+    pool = KVPool(4, 4, reserved_handles=1)
+    pool.alloc('a', 6, 'offline')   # spans ≥2 handles
+    inv = pool.reclaim_handles([pool.offline_handles()[0]])
+    assert 'a' in inv
+    # request 'a' lost all its pages, including ones outside the handle
+    assert 'a' not in pool.pages_of
+    pool.check_invariants()
+
+
+def test_pool_online_reserved_separation():
+    pool = KVPool(4, 4, reserved_handles=2)
+    # online allocs only from reserved handles, offline only outside
+    on = pool.alloc('on', 8, 'online')
+    off = pool.alloc('off', 8, 'offline')
+    on_handles = {pool.handle_of(p) for p in on}
+    off_handles = {pool.handle_of(p) for p in off}
+    assert on_handles <= set(pool.reserved)
+    assert not (off_handles & set(pool.reserved))
+    assert pool.alloc('on2', 1, 'online') is None   # reserved exhausted
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 6), st.integers(2, 8), st.integers(1, 12),
+       st.randoms(use_true_random=False))
+def test_algorithm1_structure(k, n_handles, n_reqs, rnd):
+    """Greedy picks k distinct handles and its FIRST pick has globally
+    minimal single-handle token cost (the per-step guarantee)."""
+    reqs = {f'r{i}': rnd.randint(1, 100) for i in range(n_reqs)}
+    assignment = {h: {r for r in reqs if rnd.random() < 0.4}
+                  for h in range(n_handles)}
+    cost = lambda r: reqs[r]
+    reqs_of = lambda h: assignment[h]
+    kk = min(k, n_handles)
+    greedy = eviction.select_handles(kk, list(range(n_handles)),
+                                     reqs_of, cost)
+    assert len(greedy) == kk == len(set(greedy))
+    first_cost = sum(reqs[r] for r in assignment[greedy[0]])
+    assert first_cost == min(sum(reqs[r] for r in assignment[h])
+                             for h in range(n_handles))
+
+
+def test_algorithm1_beats_fifo_in_aggregate():
+    """Across many random fragmented pools, greedy's expected impacted cost
+    is well below FIFO's (Fig. 11's 22.9–40.1% claim is an aggregate)."""
+    rnd = np.random.default_rng(0)
+    g_tot = f_tot = 0.0
+    for trial in range(200):
+        n_handles, n_reqs = 10, 16
+        costs = {f'r{i}': int(rnd.integers(1, 200)) for i in range(n_reqs)}
+        assignment = {h: {r for r in costs if rnd.random() < 0.3}
+                      for h in range(n_handles)}
+        reqs_of = lambda h: assignment[h]
+        cost = lambda r: costs[r]
+        k = 3
+        def total(sel):
+            return sum(costs[r] for r in eviction.impacted_requests(
+                sel, reqs_of))
+        g_tot += total(eviction.select_handles(
+            k, list(range(n_handles)), reqs_of, cost))
+        f_tot += total(eviction.select_handles_fifo(
+            k, list(range(n_handles))))
+    assert g_tot < 0.75 * f_tot        # ≥25% aggregate cost reduction
+
+
+def test_algorithm1_prefers_cheap_handles():
+    # handle 0 impacts an expensive request, handle 1 a cheap one, 2 none
+    reqs_of = {0: {'big'}, 1: {'small'}, 2: set()}.__getitem__
+    cost = {'big': 1000, 'small': 1}.__getitem__
+    assert eviction.select_handles(1, [0, 1, 2], reqs_of, cost) == [2]
+    assert eviction.select_handles(2, [0, 1, 2], reqs_of, cost) == [2, 1]
+
+
+def test_algorithm1_marginal_cost_shares_requests():
+    """A request already impacted by an earlier pick is free for later
+    picks (the E set in the paper's Algorithm 1)."""
+    # handles 0,1 share request x (cost 10); handle 2 has y (cost 5)
+    reqs_of = {0: {'x'}, 1: {'x'}, 2: {'y'}}.__getitem__
+    cost = {'x': 10, 'y': 5}.__getitem__
+    sel = eviction.select_handles(2, [0, 1, 2], reqs_of, cost)
+    assert sel == [2, 0] or sel == [2, 1] or set(sel) == {0, 1}
+    # picking both x-handles costs 10; picking y then an x-handle costs 15 —
+    # but greedy picks y (5) first, then an x handle (10) = marginal 10;
+    # alternative [0,1] = 10 total.  Verify greedy's total ≤ any pair:
+    def total(s):
+        return sum(cost(r) for r in eviction.impacted_requests(s, reqs_of))
+    best = min(total(p) for p in ([0, 1], [0, 2], [1, 2]))
+    assert total(sel) <= best + 5  # greedy is 1-1/e-approx, sanity bound
+
+
+# ---------------------------------------------------------------------------
+# MIAD
+# ---------------------------------------------------------------------------
+
+def test_miad_bounds_and_growth():
+    cfg = MIADConfig(alpha=2.0, h_max=32)
+    m = MIADReservation(h_init=1, cfg=cfg)
+    # sustained pressure: H doubles but never exceeds h_max
+    for i in range(20):
+        h = m.on_tick(float(i), online_used=h_used(m))
+        assert 1 <= h <= 32
+    assert m.h == 32
+
+
+def h_used(m):
+    return m.h  # always at 100% of reservation → pressured
+
+
+def test_miad_release_when_idle():
+    cfg = MIADConfig(t_init=1.0, t_min=0.5, t_step=0.5, h_max=32)
+    m = MIADReservation(h_init=16, cfg=cfg)
+    t = 0.0
+    for _ in range(100):
+        t += 1.0
+        m.on_tick(t, online_used=0)
+    assert m.h == cfg.h_min            # fully released back to offline
+
+
+def test_miad_t_controller_tracks_target():
+    """Reclamations above target → T grows (hold longer); below → shrinks."""
+    cfg = MIADConfig(target_rate=0.1, rate_window=10.0, t_init=1.0,
+                     t_max=16.0)
+    m = MIADReservation(h_init=4, cfg=cfg)
+    t = 0.0
+    for _ in range(20):                # 2 reclaims/s >> target
+        t += 0.5
+        m.note_reclamation(t)
+        m.on_tick(t, online_used=0)
+    assert m.t > cfg.t_init
+    high = m.t
+    for _ in range(120):               # silence → rate decays below target
+        t += 1.0
+        m.on_tick(t, online_used=0)
+    assert m.t < high
+    assert m.t == cfg.t_min            # fully relaxed
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle / T_cool
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_gap_telemetry_and_t_cool():
+    lc = OnlineLifecycleTracker(t_cool_init=0.001)
+    lc.request_start('r', 0.0)
+    t = 0.0
+    for _ in range(5):                 # decode iterations with 3ms gaps
+        lc.iteration_start(t)
+        t += 0.030
+        lc.iteration_end(t)
+        t += 0.003
+    lc.request_end('r', t)
+    assert lc.max_gap == pytest.approx(0.003)
+    assert lc.t_cool == pytest.approx(0.006)   # 2 × max gap
+    # inside cooldown: may not wake
+    assert not lc.may_wake_offline(t + 0.004)
+    assert lc.may_wake_offline(t + 0.007)
+
+
+def test_lifecycle_idle_between_requests_is_not_a_gap():
+    lc = OnlineLifecycleTracker(t_cool_init=0.001)
+    lc.request_start('a', 0.0)
+    lc.iteration_start(0.0)
+    lc.iteration_end(0.03)
+    lc.request_end('a', 0.03)
+    # 10 s idle, then a new request — must not register a 10 s "gap"
+    lc.request_start('b', 10.0)
+    lc.iteration_start(10.0)
+    lc.iteration_end(10.03)
+    lc.request_end('b', 10.03)
+    assert lc.max_gap < 1.0
