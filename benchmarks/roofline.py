@@ -1,9 +1,12 @@
-"""Deliverable (g): roofline table from the dry-run sweep.
+"""Roofline table from the dry-run sweep (supporting analysis — backs the
+performance claims rather than reproducing one numbered paper figure).
 
-Reads results/dryrun.jsonl (written by repro.launch.dryrun) and renders the
-per-(arch × shape × mesh) three-term roofline with the dominant bottleneck,
-MODEL_FLOPS/HLO_FLOPS useful ratio, and per-device HBM fit.  Hardware:
-TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Reads results/dryrun.jsonl (written by ``python -m repro.launch.dryrun
+--sweep``) and renders the per-(arch × shape × mesh) three-term roofline —
+compute, HBM, collective — with the dominant bottleneck, the
+MODEL_FLOPS/HLO_FLOPS useful ratio, and per-device HBM fit.  Prints a skip
+message when the sweep output is absent.  Hardware model: TPU v5e —
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 """
 from __future__ import annotations
 

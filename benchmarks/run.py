@@ -5,6 +5,7 @@
 Writes per-benchmark JSON to results/ and prints each table.  The dry-run
 sweep itself (results/dryrun.jsonl) is produced by
 ``python -m repro.launch.dryrun --sweep``; benchmarks.roofline consumes it.
+See benchmarks/README.md for the script ↔ paper-figure map.
 """
 from __future__ import annotations
 
@@ -23,7 +24,7 @@ BENCHES = [
     ('eviction_policy', 'paper Fig. 11 — Algorithm 1 vs FIFO'),
     ('colocation_matrix', 'paper Fig. 10 — 10 pairs × 6 strategies'),
     ('cluster_utilization', 'paper Fig. 8/9 — fleet utilization + savings'),
-    ('roofline', 'deliverable (g) — dry-run roofline table'),
+    ('roofline', 'supporting analysis — dry-run roofline table'),
 ]
 
 

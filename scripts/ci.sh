@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 suite + a fast kernel-parity subset.
+#
+# The kernel-parity subset re-runs first and verbosely even though tier-1
+# includes it: the Pallas kernels are where jax API drift lands (compiler
+# params, shard_map, cost_analysis — all shimmed in
+# src/repro/kernels/common.py), so a jax bump that breaks them fails loudly
+# at the top of the log instead of somewhere inside the full run.
+#
+# Usage:  scripts/ci.sh [--kernels-only]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== jax version: $(python -c 'import jax; print(jax.__version__)')"
+
+echo "== kernel parity (fast subset, interpret mode) =="
+python -m pytest -q \
+    tests/test_kernels_flash.py \
+    tests/test_kernels_paged.py \
+    tests/test_kernels_rwkv6.py \
+    tests/test_kernel_integration.py
+
+if [[ "${1:-}" == "--kernels-only" ]]; then
+    exit 0
+fi
+
+echo "== tier-1 =="
+python -m pytest -x -q
+
+echo "CI green."

@@ -1,3 +1,19 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernel layer.  Every kernel package (flash_attention,
+# paged_attention, rwkv6) is <name>/kernel.py + ops.py + ref.py; import the
+# public entry points from the ops modules, e.g.
+#
+#     from repro.kernels.flash_attention.ops import flash_attention
+#     from repro.kernels.paged_attention.ops import (paged_attention,
+#                                                    paged_attention_decode)
+#     from repro.kernels.rwkv6.ops import wkv6
+#
+# This __init__ re-exports ONLY the compat/toolkit shims: the ops modules are
+# deliberately not imported here — non-kernel consumers of
+# repro.kernels.common (e.g. distributed/sharding.py, on every model import
+# path) must not pay the Pallas ops import cost, and the function names
+# shadow their subpackage names, so package-level function re-exports are an
+# import-order hazard.  Shared machinery and ALL version-sensitive JAX
+# surface (compiler params, shard_map, interpret fallback) live in
+# repro.kernels.common.
+from repro.kernels.common import (  # noqa: F401
+    compiler_params, cost_analysis_dict, resolve_interpret, shard_map)

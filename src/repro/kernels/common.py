@@ -1,0 +1,249 @@
+"""Shared kernel toolkit + JAX version-compat shim.
+
+Every version-sensitive JAX surface the kernels touch goes through this
+module, so an API rename in a jax upgrade is a one-file fix instead of a
+sweep over every ``kernel.py``:
+
+- **compiler params**: ``pltpu.CompilerParams`` (jax ≥ 0.5) vs
+  ``pltpu.TPUCompilerParams`` (jax 0.4.x) — :func:`compiler_params`;
+- **shard_map**: ``jax.shard_map(..., check_vma=)`` (jax ≥ 0.6) vs
+  ``jax.experimental.shard_map.shard_map(..., check_rep=)`` —
+  :func:`shard_map`;
+- **cost analysis**: ``Compiled.cost_analysis()`` returns a dict on new jax
+  and a one-element list of dicts on 0.4.x — :func:`cost_analysis_dict`.
+
+It also centralizes the machinery all three Pallas kernels (flash, paged,
+wkv6) previously re-implemented:
+
+- TPU-lane-aligned block/tile-size selection and padding
+  (:func:`pick_block`, :func:`pad_axis_to`);
+- the online-softmax running max/denominator update carried across the
+  sequential grid axis (:func:`online_softmax_init` /
+  :func:`online_softmax_update` / :func:`online_softmax_finalize`);
+- causal and length ("quarantine") masking on score blocks
+  (:func:`mask_block_scores`);
+- automatic interpret-mode fallback off-TPU (:func:`resolve_interpret`) so
+  the parity suite runs everywhere.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    'NEG_INF', 'LANES', 'SUBLANES',
+    'jax_version', 'jax_at_least',
+    'compiler_params', 'shard_map', 'cost_analysis_dict',
+    'resolve_interpret',
+    'ceil_div', 'round_up', 'pick_block', 'pad_axis_to',
+    'online_softmax_init', 'online_softmax_update', 'online_softmax_finalize',
+    'block_positions', 'mask_block_scores',
+]
+
+# Softmax mask fill value: large-negative but finite in f32, so a fully
+# masked row underflows exp() to 0 instead of producing NaN via inf - inf.
+NEG_INF = -1e30
+
+# TPU register tiling: last dim is always 128 lanes; the f32 sublane count
+# is 8 (doubles for bf16 / quadruples for int8 — see the Pallas guide).
+LANES = 128
+SUBLANES = 8
+
+
+# ---------------------------------------------------------------------------
+# Version detection
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def jax_version() -> Tuple[int, ...]:
+    """``jax.__version__`` as an int tuple ('0.4.37' → (0, 4, 37))."""
+    return tuple(int(p) for p in
+                 re.findall(r'\d+', jax.__version__)[:3])
+
+
+def jax_at_least(*version: int) -> bool:
+    return jax_version() >= tuple(version)
+
+
+# ---------------------------------------------------------------------------
+# Compat shims
+# ---------------------------------------------------------------------------
+
+# jax 0.5 renamed TPUCompilerParams → CompilerParams (and kept a deprecation
+# alias for a while); 0.4.x only has the TPU-prefixed name.
+_COMPILER_PARAMS_CLS = getattr(pltpu, 'CompilerParams', None) \
+    or getattr(pltpu, 'TPUCompilerParams')
+
+
+def compiler_params(*, dimension_semantics: Optional[Sequence[str]] = None,
+                    **kwargs):
+    """Construct Mosaic compiler params under either jax naming.
+
+    Kernels must use this instead of touching ``pltpu.*CompilerParams``
+    directly (enforced by the kernel parity suite staying green across jax
+    upgrades).
+    """
+    return _COMPILER_PARAMS_CLS(dimension_semantics=dimension_semantics,
+                                **kwargs)
+
+
+def shard_map(f, mesh, *, in_specs, out_specs, check_replication: bool = True):
+    """Version-portable ``shard_map``.
+
+    Two independent API moves are absorbed here: the promotion from
+    ``jax.experimental.shard_map.shard_map`` to ``jax.shard_map``, and the
+    ``check_rep`` → ``check_vma`` kwarg rename — they landed in different
+    jax releases, so the kwarg is probed from the actual signature rather
+    than inferred from where the function lives.
+    """
+    if hasattr(jax, 'shard_map'):
+        fn = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as fn
+    params = inspect.signature(fn).parameters
+    check_kw = 'check_vma' if 'check_vma' in params else 'check_rep'
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{check_kw: check_replication})
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized to a flat dict.
+
+    jax 0.4.x returns a one-element list of per-program dicts; newer jax
+    returns the dict directly (and may return None for trivial programs).
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve an ``interpret`` tri-state: None → auto.
+
+    Mosaic kernels only compile for TPU backends; everywhere else (the CPU
+    parity/CI suites, GPU dev boxes) the same kernel runs under the Pallas
+    interpreter, which lowers to plain HLO.  Passing an explicit bool always
+    wins — tests pin ``interpret=True`` so they are hermetic.
+    """
+    if interpret is None:
+        return jax.default_backend() != 'tpu'
+    return interpret
+
+
+# ---------------------------------------------------------------------------
+# Block / tile selection and padding
+# ---------------------------------------------------------------------------
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(x: int, multiple: int) -> int:
+    return ceil_div(x, multiple) * multiple
+
+
+def pick_block(dim: int, preferred: int, *, align: int = SUBLANES) -> int:
+    """Block size for a ``dim``-long *sequence* axis: ``preferred``, shrunk
+    for short axes but always a multiple of ``align`` so tiles stay
+    sublane-aligned (the last/lane dim of a tile is the head dim and is
+    fixed by the caller, so the default alignment here is the f32 sublane
+    count).
+
+    A 1024-token axis at preferred 128 → 128; a 50-token axis → 56 (one
+    near-fit block beats a mostly-padded 128); a 300-token axis at
+    preferred 512 → 304.
+    """
+    assert preferred % align == 0, (preferred, align)
+    if dim >= preferred:
+        return preferred
+    return max(align, min(preferred, round_up(dim, align)))
+
+
+def pad_axis_to(x, axis: int, multiple: int, *, value=0):
+    """Zero-pad (or ``value``-pad) one axis of ``x`` up to a multiple.
+
+    Returns ``x`` unchanged when already aligned — the common case at
+    production shapes, so no copy is inserted.
+    """
+    size = x.shape[axis]
+    target = round_up(size, multiple)
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# Online softmax (the running-max/denominator state all attention kernels
+# carry across their sequential KV/page grid axis)
+# ---------------------------------------------------------------------------
+
+def online_softmax_init(m_ref, l_ref, acc_ref) -> None:
+    """Reset the VMEM scratch carried across the sequential grid axis."""
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def online_softmax_update(s, v, m_prev, l_prev, acc_prev):
+    """One online-softmax step over a masked score block.
+
+    s: (rows, cols) f32 scores (masked entries at NEG_INF); v: (cols, D).
+    Returns the rescaled ``(m_new, l_new, acc_new)`` running state.  Fully
+    masked rows are safe: ``exp(NEG_INF - m)`` underflows to 0.
+    """
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_new = (acc_prev * alpha[:, None]
+               + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def online_softmax_finalize(acc, l):
+    """acc / l with fully-masked rows (l == 0) mapped to 0, not NaN."""
+    safe = jnp.where(l == 0.0, 1.0, l)
+    return acc / safe[:, None]
+
+
+# ---------------------------------------------------------------------------
+# Masking (causal + length/quarantine)
+# ---------------------------------------------------------------------------
+
+def block_positions(block_index, block_size: int, shape, dim: int):
+    """Absolute positions of a tile's rows/cols: block offset + iota."""
+    return block_index * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, shape, dim)
+
+
+def mask_block_scores(s, *, q_pos=None, k_pos=None, causal: bool = False,
+                      kv_len=None):
+    """Apply causal and/or valid-length masking to a score block.
+
+    ``kv_len`` bounds valid KV positions — this is the quarantine contract:
+    tokens past a request's length (including garbage streamed from the
+    always-mapped quarantine page) are forced to NEG_INF so they cannot
+    contribute, which is what makes page reclamation harmless for healthy
+    requests (paper §5).
+    """
+    mask = None
+    if kv_len is not None:
+        assert k_pos is not None
+        mask = k_pos < kv_len
+    if causal:
+        assert q_pos is not None and k_pos is not None
+        cmask = q_pos >= k_pos
+        mask = cmask if mask is None else (mask & cmask)
+    if mask is None:
+        return s
+    return jnp.where(mask, s, NEG_INF)

@@ -13,6 +13,9 @@ MXU because every lane is masked (a fully-skipped variant would use
 
 Block sizes default to (128, 128): q/k/v tiles of 128×Dh bf16 keep the
 working set ≤ ~200 KB in VMEM at Dh=128 and align to the 128-lane MXU.
+Shared machinery (online softmax, masking, padding, compiler-params
+construction) comes from :mod:`repro.kernels.common` — this file contains
+only the flash-specific grid/BlockSpec layout.
 """
 from __future__ import annotations
 
@@ -24,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels import common as kc
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -36,9 +39,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(ik == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        kc.online_softmax_init(m_ref, l_ref, acc_ref)
 
     q = q_ref[0].astype(jnp.float32)                  # (Bq, D)
     k = k_ref[0].astype(jnp.float32)                  # (Bk, D)
@@ -46,39 +47,24 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
 
-    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    mask = k_pos < kv_len
-    if causal:
-        mask &= q_pos >= k_pos
-    s = jnp.where(mask, s, NEG_INF)
+    q_pos = kc.block_positions(iq, block_q, s.shape, 0)
+    k_pos = kc.block_positions(ik, block_k, s.shape, 1)
+    s = kc.mask_block_scores(s, q_pos=q_pos, k_pos=k_pos, causal=causal,
+                             kv_len=kv_len)
 
-    m_prev = m_ref[...]
-    l_prev = l_ref[...]
-    m_cur = jnp.max(s, axis=1)
-    m_new = jnp.maximum(m_prev, m_cur)
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])
-    # fully-masked rows: p underflows to exp(NEG_INF - m)→0, safe
-    l_new = l_prev * alpha + jnp.sum(p, axis=1)
-    acc_ref[...] = (acc_ref[...] * alpha[:, None]
-                    + jax.lax.dot_general(
-                        p, v, (((1,), (0,)), ((), ())),
-                        preferred_element_type=jnp.float32))
-    m_ref[...] = m_new
-    l_ref[...] = l_new
+    m_ref[...], l_ref[...], acc_ref[...] = kc.online_softmax_update(
+        s, v, m_ref[...], l_ref[...], acc_ref[...])
 
     @pl.when(ik == nk - 1)
     def _flush():
-        l = l_ref[...]
-        safe = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+        o_ref[0] = kc.online_softmax_finalize(
+            acc_ref[...], l_ref[...]).astype(o_ref.dtype)
 
 
 def flash_attention_bhsd(q, k, v, *, causal: bool = True,
                          scale: Optional[float] = None,
                          block_q: int = 128, block_k: int = 128,
-                         interpret: bool = False):
+                         interpret: Optional[bool] = None):
     """q: (BHq, Sq, D); k/v: (BHkv, Skv, D); BHq = BHkv · group.
 
     Heads are flattened batch-major (b·H + h) so the kv index map recovers
@@ -89,14 +75,12 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True,
     assert bhq % bhkv == 0, (bhq, bhkv)
     group = bhq // bhkv  # (b·H + h) // g == b·Hkv + h // g since g | H
     scale = d ** -0.5 if scale is None else scale
+    interpret = kc.resolve_interpret(interpret)
 
-    sq_pad = -(-sq // block_q) * block_q
-    skv_pad = -(-skv // block_k) * block_k
-    if sq_pad != sq:
-        q = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0)))
-    if skv_pad != skv:
-        k = jnp.pad(k, ((0, 0), (0, skv_pad - skv), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, skv_pad - skv), (0, 0)))
+    q = kc.pad_axis_to(q, 1, block_q)
+    k = kc.pad_axis_to(k, 1, block_k)
+    v = kc.pad_axis_to(v, 1, block_k)
+    sq_pad, skv_pad = q.shape[1], k.shape[1]
 
     grid = (bhq, sq_pad // block_q, skv_pad // block_k)
 
@@ -121,7 +105,7 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True,
             pltpu.VMEM((block_q,), jnp.float32),        # l
             pltpu.VMEM((block_q, d), jnp.float32),      # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=kc.compiler_params(
             dimension_semantics=('parallel', 'parallel', 'arbitrary')),
         interpret=interpret,
     )(q, k, v)

@@ -2,8 +2,9 @@
 
 Layout contract with the model code: q (B, Sq, Hq, D), k/v (B, Skv, Hkv, D)
 — same as models.common.attention.  The wrapper flattens heads batch-major
-so the kernel's GQA index maps work, and exposes ``interpret`` for the CPU
-validation sweeps.
+so the kernel's GQA index maps work.  ``interpret=None`` (the default)
+auto-falls back to the Pallas interpreter off-TPU (see
+``repro.kernels.common.resolve_interpret``); tests pin ``interpret=True``.
 """
 from __future__ import annotations
 
@@ -21,7 +22,7 @@ from repro.kernels.flash_attention.kernel import flash_attention_bhsd
 def flash_attention(q, k, v, *, causal: bool = True,
                     scale: Optional[float] = None,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = False):
+                    interpret: Optional[bool] = None):
     b, sq, hq, d = q.shape
     _, skv, hkv, _ = k.shape
     assert hq % hkv == 0, (hq, hkv)

@@ -14,7 +14,9 @@ garbage that is either masked (healthy request) or discarded by Valve's
 invalidation-recompute contract — never a fault, by construction.
 
 GQA: q for one (b, kv-head) is the (group, Dh) block of query heads; with
-group ≤ 8 and Dh = 128 the q tile is one MXU pass per page.
+group ≤ 8 and Dh = 128 the q tile is one MXU pass per page.  Shared
+machinery (online softmax, length masking, compiler-params construction)
+comes from :mod:`repro.kernels.common`.
 """
 from __future__ import annotations
 
@@ -26,7 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels import common as kc
 
 
 def _paged_kernel(page_table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
@@ -37,9 +39,7 @@ def _paged_kernel(page_table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(ip == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        kc.online_softmax_init(m_ref, l_ref, acc_ref)
 
     q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
     k = k_ref[0, :, 0].astype(jnp.float32)            # (pg, D)
@@ -47,36 +47,28 @@ def _paged_kernel(page_table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    pos = ip * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    valid = pos < lengths_ref[b]
-    s = jnp.where(valid, s, NEG_INF)
+    pos = kc.block_positions(ip, page_size, s.shape, 1)
+    s = kc.mask_block_scores(s, k_pos=pos, kv_len=lengths_ref[b])
 
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
-    acc_ref[...] = (acc_ref[...] * alpha[:, None]
-                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                                          preferred_element_type=jnp.float32))
-    m_ref[...] = m_new
+    m_ref[...], l_ref[...], acc_ref[...] = kc.online_softmax_update(
+        s, v, m_ref[...], l_ref[...], acc_ref[...])
 
     @pl.when(ip == np_ - 1)
     def _flush():
-        l = l_ref[...]
-        safe = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+        o_ref[0, 0] = kc.online_softmax_finalize(
+            acc_ref[...], l_ref[...]).astype(o_ref.dtype)
 
 
 def paged_attention_bhgd(q, pool_k, pool_v, page_table, lengths, *,
                          scale: Optional[float] = None,
-                         interpret: bool = False):
+                         interpret: Optional[bool] = None):
     """q: (B, Hkv, G, D); pools: (P, pg, Hkv, D) — global paged layout;
     page_table: (B, maxp) physical ids (0 = quarantine); lengths: (B,)."""
     b, hkv, g, d = q.shape
     p_total, pg, _, _ = pool_k.shape
     maxp = page_table.shape[1]
     scale = d ** -0.5 if scale is None else scale
+    interpret = kc.resolve_interpret(interpret)
 
     grid = (b, hkv, maxp)
     kernel = functools.partial(_paged_kernel, page_size=pg, scale=scale)
@@ -105,7 +97,7 @@ def paged_attention_bhgd(q, pool_k, pool_v, page_table, lengths, *,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=kc.compiler_params(
             dimension_semantics=('parallel', 'parallel', 'arbitrary')),
         interpret=interpret,
     )(page_table, lengths, q, pool_k, pool_v)

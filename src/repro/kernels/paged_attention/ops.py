@@ -1,4 +1,9 @@
-"""jit'd wrapper: model layout (B, Hq, D) ↔ kernel layout (B, Hkv, G, D)."""
+"""jit'd wrapper: model layout (B, Hq, D) ↔ kernel layout (B, Hkv, G, D).
+
+Also home of :func:`paged_attention_decode`, the decode-specialized entry
+point the serving engine's hot path dispatches through (one new token per
+request; see ``serving/engine.py``).
+"""
 from __future__ import annotations
 
 import functools
@@ -7,12 +12,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common as kc
 from repro.kernels.paged_attention.kernel import paged_attention_bhgd
 
 
 @functools.partial(jax.jit, static_argnames=('scale', 'interpret'))
 def paged_attention(q, pool_k, pool_v, page_table, lengths, *,
-                    scale: Optional[float] = None, interpret: bool = False):
+                    scale: Optional[float] = None,
+                    interpret: Optional[bool] = None):
     """Decode attention through the page table.
 
     q: (B, Hq, D); pools: (P, pg, Hkv, D); page_table: (B, maxp);
@@ -28,3 +35,33 @@ def paged_attention(q, pool_k, pool_v, page_table, lengths, *,
                                lengths.astype(jnp.int32), scale=scale,
                                interpret=interpret)
     return out.reshape(b, hq, d)
+
+
+def paged_attention_decode(q, pool_k, pool_v, page_table, lengths, *,
+                           scale: Optional[float] = None,
+                           interpret: Optional[bool] = None):
+    """Single-token decode attention — the serving hot path.
+
+    Unlike the oracle (``models.common.paged_attention_ref``), which gathers
+    the request's FULL ``(B, maxp·pg, Hkv, Dh)`` KV out of the pool and runs
+    dense attention over it every iteration, this streams pages HBM→VMEM
+    through the page table inside the Pallas kernel: the decode step never
+    materializes full-sequence attention shapes, and traffic is bounded by
+    the pages a request actually owns rather than by ``max_seq``.
+
+    Layout dispatch: the global 4-D pool ``(P, pg, Hkv, Dh)`` — the engine
+    layout Valve's quarantine remap operates on — takes the kernel; the
+    region 5-D layout ``(B, R, pg, Hkv, Dh)`` is already a batch-aligned
+    ``take_along_axis`` under SPMD and keeps the reference path (the kernel's
+    scalar-prefetch page indirection is not SPMD-partitionable).
+
+    q: (B, Hq, Dh); lengths: (B,) — context length *including* the token
+    being decoded (the engine passes ``positions + 1``).
+    """
+    if pool_k.ndim == 5:
+        from repro.models.common import paged_attention_ref
+        return paged_attention_ref(q, pool_k, pool_v, page_table, lengths,
+                                   scale=scale)
+    return paged_attention(q, pool_k, pool_v, page_table, lengths,
+                           scale=scale,
+                           interpret=kc.resolve_interpret(interpret))

@@ -10,16 +10,21 @@ and only the O(T/c) chunk boundary is sequential.
 
 Grid ``(B, H, n_chunks)`` — chunks innermost/sequential ('arbitrary');
 state scratch (K, V) f32.  Padding tokens must carry w=1, k=0, r=0 (decay
-no-op, no state contribution) — the wrapper guarantees this.
+no-op, no state contribution) — the wrapper guarantees this.  Padding and
+compiler-params construction go through :mod:`repro.kernels.common` (wkv6
+has no softmax, so the online-softmax helpers don't apply here).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common as kc
 
 
 def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
@@ -71,20 +76,20 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
 
 
 def wkv6_bthk(r, k, v, w, u, state, *, chunk: int = 64,
-              interpret: bool = False):
+              interpret: Optional[bool] = None):
     """r/k/v/w: (B, T, H, K); u: (H, K); state: (B, H, K, V) f32.
 
     Returns (y (B, T, H, V), state_out (B, H, K, V)).
     """
     b, t, h, dk = r.shape
     dv = v.shape[-1]
-    t_pad = -(-t // chunk) * chunk
+    interpret = kc.resolve_interpret(interpret)
+    t_pad = kc.round_up(t, chunk)
     if t_pad != t:
-        pad = ((0, 0), (0, t_pad - t), (0, 0), (0, 0))
-        r = jnp.pad(r, pad)
-        k = jnp.pad(k, pad)
-        v = jnp.pad(v, pad)
-        w = jnp.pad(w, pad, constant_values=1.0)      # decay no-op
+        r = kc.pad_axis_to(r, 1, chunk)
+        k = kc.pad_axis_to(k, 1, chunk)
+        v = kc.pad_axis_to(v, 1, chunk)
+        w = kc.pad_axis_to(w, 1, chunk, value=1.0)    # decay no-op
 
     grid = (b, h, t_pad // chunk)
     io_spec = lambda: pl.BlockSpec((1, chunk, 1, dk),
@@ -108,7 +113,7 @@ def wkv6_bthk(r, k, v, w, u, state, *, chunk: int = 64,
             jax.ShapeDtypeStruct((b, h, dk, dv), jnp.float32),
         ),
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=kc.compiler_params(
             dimension_semantics=('parallel', 'parallel', 'arbitrary')),
         interpret=interpret,
     )(r, k, v, w, u, state)

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +11,8 @@ from repro.kernels.rwkv6.kernel import wkv6_bthk
 
 
 @functools.partial(jax.jit, static_argnames=('chunk', 'interpret'))
-def wkv6(r, k, v, w, u, state, *, chunk: int = 64, interpret: bool = False):
+def wkv6(r, k, v, w, u, state, *, chunk: int = 64,
+         interpret: Optional[bool] = None):
     """r/k/v/w: (B, T, H, K); u: (H, K); state: (B, H, K, V) f32.
 
     Matches models.rwkv6.wkv6_ref / wkv6_chunked.

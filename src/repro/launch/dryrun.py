@@ -99,9 +99,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         rec.update(status='FAILED', error=f'{type(e).__name__}: {e}')
         return rec
 
+    from repro.kernels.common import cost_analysis_dict
     from repro.launch import hlo_analysis as ha
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     costs = ha.analyze(compiled.as_text())
 
     n_chips = meshlib.chips(mesh)

@@ -65,10 +65,16 @@ class Model:
     def prefill_fn(self, params, cache, batch):
         return self.mod.prefill(self.cfg, params, cache, batch)
 
-    def decode_fn(self, params, cache, batch, *, long_context=False):
+    def decode_fn(self, params, cache, batch, *, long_context=False,
+                  use_pallas=False):
         if self.cfg.family == 'hybrid':
             return self.mod.decode_step(self.cfg, params, cache, batch,
                                         long_context=long_context)
+        if self.cfg.family in ('dense', 'vlm', 'moe'):
+            # paged-KV decoder families route decode attention through the
+            # Pallas paged kernel when asked (the engine's hot path)
+            return self.mod.decode_step(self.cfg, params, cache, batch,
+                                        use_pallas=use_pallas)
         return self.mod.decode_step(self.cfg, params, cache, batch)
 
     # -------------------------------------------------------- caches

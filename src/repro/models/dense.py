@@ -127,12 +127,13 @@ def self_attn_prefill(cfg: ModelConfig, lp, x, positions, pool_k, pool_v,
     pool_v = cm.kv_write_prefill(pool_v, page_table, v)
     if use_pallas:
         # serving hot spot: flash kernel keeps scores in VMEM (no grad
-        # needed on the prefill path); interpret=True validates on CPU
+        # needed on the prefill path); interpret=None auto-falls back to
+        # the Pallas interpreter off-TPU (kernels.common.resolve_interpret)
+        from repro.kernels.common import pick_block
         from repro.kernels.flash_attention.ops import flash_attention
         out = flash_attention(q, k, v, causal=True,
-                              block_q=min(128, q.shape[1]),
-                              block_k=min(128, k.shape[1]),
-                              interpret=jax.default_backend() == 'cpu')
+                              block_q=pick_block(q.shape[1], 128),
+                              block_k=pick_block(k.shape[1], 128))
     else:
         out = cm.chunked_attention(q, k, v, q_positions=positions,
                                    kv_positions=positions, causal=True)
@@ -143,7 +144,7 @@ def self_attn_prefill(cfg: ModelConfig, lp, x, positions, pool_k, pool_v,
 
 
 def self_attn_decode(cfg: ModelConfig, lp, x, positions, pool_k, pool_v,
-                     page_table):
+                     page_table, *, use_pallas: bool = False):
     """x: (B, 1, D); positions: (B,) index of the new token."""
     b = x.shape[0]
     pg = pool_k.shape[-3]   # page size (layout-agnostic: global 4-D / region 5-D)
@@ -153,8 +154,16 @@ def self_attn_decode(cfg: ModelConfig, lp, x, positions, pool_k, pool_v,
     offs = positions % pg
     pool_k = cm.kv_write_token(pool_k, page_idx, offs, k[:, 0])
     pool_v = cm.kv_write_token(pool_v, page_idx, offs, v[:, 0])
-    out = cm.paged_attention_ref(q[:, 0], pool_k, pool_v, page_table,
-                                 positions + 1)
+    if use_pallas:
+        # decode hot path: pages stream HBM→VMEM through the page table
+        # instead of gathering the full (B, maxp·pg, Hkv, Dh) KV (the
+        # oracle path below); falls back to the ref for the region layout
+        from repro.kernels.paged_attention.ops import paged_attention_decode
+        out = paged_attention_decode(q[:, 0], pool_k, pool_v, page_table,
+                                     positions + 1)
+    else:
+        out = cm.paged_attention_ref(q[:, 0], pool_k, pool_v, page_table,
+                                     positions + 1)
     out = out.reshape(b, 1, -1)
     out = constrain(out, ('batch', 'seq', 'qkv'))
     return out @ lp['wo'], pool_k, pool_v
@@ -174,7 +183,8 @@ def layer_apply(cfg: ModelConfig, lp, h, positions, mode: str,
         new_cache_l = {'k': pk, 'v': pv}
     elif mode == 'decode':
         attn_out, pk, pv = self_attn_decode(
-            cfg, lp, x, positions, cache_l['k'], cache_l['v'], page_table)
+            cfg, lp, x, positions, cache_l['k'], cache_l['v'], page_table,
+            use_pallas=use_pallas)
         new_cache_l = {'k': pk, 'v': pv}
     else:
         raise ValueError(mode)
@@ -296,14 +306,15 @@ def prefill_chunk(cfg: ModelConfig, params, cache, batch):
     return cache, constrain(logits, ('batch', 'vocab'))
 
 
-def decode_step(cfg: ModelConfig, params, cache, batch):
+def decode_step(cfg: ModelConfig, params, cache, batch, *,
+                use_pallas: bool = False):
     tokens = batch['tokens']            # (B,)
     positions = batch['positions']      # (B,) index of the new token
     h = params['embed'][tokens][:, None, :]
     h = constrain(h, ('batch', 'seq', 'embed'))
     h, cache = scan_layers(cfg, params['layers'], h, positions, 'decode',
                            cache=cache, page_table=batch['page_table'],
-                           remat=False)
+                           remat=False, use_pallas=use_pallas)
     last = cm.rms_norm(h[:, 0], params['final_norm'], cfg.norm_eps)
     logits = last @ unembed_of(cfg, params)
     return cache, constrain(logits, ('batch', 'vocab'))

@@ -92,7 +92,8 @@ def moe_mlp(cfg: ModelConfig, lp, x, *, capacity_factor: float = 1.25):
 
 
 def layer_apply(cfg: ModelConfig, lp, h, positions, mode: str,
-                cache_l=None, page_table=None, capacity_factor: float = 1.25):
+                cache_l=None, page_table=None, capacity_factor: float = 1.25,
+                use_pallas: bool = False):
     x = cm.rms_norm(h, lp['ln1'], cfg.norm_eps)
     new_cache_l = cache_l
     if mode == 'train':
@@ -103,7 +104,8 @@ def layer_apply(cfg: ModelConfig, lp, h, positions, mode: str,
         new_cache_l = {'k': pk, 'v': pv}
     else:
         attn_out, pk, pv = dense.self_attn_decode(
-            cfg, lp, x, positions, cache_l['k'], cache_l['v'], page_table)
+            cfg, lp, x, positions, cache_l['k'], cache_l['v'], page_table,
+            use_pallas=use_pallas)
         new_cache_l = {'k': pk, 'v': pv}
     h = h + attn_out
     h = constrain(h, ('batch', 'seq', 'embed'))
@@ -116,13 +118,13 @@ def layer_apply(cfg: ModelConfig, lp, h, positions, mode: str,
 
 def scan_layers(cfg: ModelConfig, layers, h, positions, mode: str,
                 cache=None, page_table=None, remat: bool = True,
-                capacity_factor: float = 1.25):
+                capacity_factor: float = 1.25, use_pallas: bool = False):
     def body(carry, xs):
         hh, aux_sum = carry
         lp, cache_l = xs
         out, new_cache_l, aux = layer_apply(
             cfg, lp, hh, positions, mode, cache_l, page_table,
-            capacity_factor=capacity_factor)
+            capacity_factor=capacity_factor, use_pallas=use_pallas)
         return (out, aux_sum + aux), new_cache_l
 
     if remat and mode == 'train':
@@ -185,14 +187,16 @@ def prefill_chunk(cfg: ModelConfig, params, cache, batch):
     return cache, constrain(logits, ('batch', 'vocab'))
 
 
-def decode_step(cfg: ModelConfig, params, cache, batch):
+def decode_step(cfg: ModelConfig, params, cache, batch, *,
+                use_pallas: bool = False):
     tokens = batch['tokens']
     positions = batch['positions']
     h = params['embed'][tokens][:, None, :]
     h = constrain(h, ('batch', 'seq', 'embed'))
     h, cache, _ = scan_layers(cfg, params['layers'], h, positions, 'decode',
                               cache=cache, page_table=batch['page_table'],
-                              remat=False, capacity_factor=2.0)
+                              remat=False, capacity_factor=2.0,
+                              use_pallas=use_pallas)
     last = cm.rms_norm(h[:, 0], params['final_norm'], cfg.norm_eps)
     logits = last @ dense.unembed_of(cfg, params)
     return cache, constrain(logits, ('batch', 'vocab'))

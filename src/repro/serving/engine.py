@@ -91,6 +91,11 @@ class EngineConfig:
     seed: int = 0
     klass: str = 'offline'          # 'online' | 'offline'
     eos_token: Optional[int] = None
+    # Decode attention through the Pallas paged kernel (pages stream
+    # HBM→VMEM via the page table) instead of the full-gather oracle.
+    # None → auto: kernel on TPU, oracle elsewhere (the interpreter would
+    # only slow CPU runs down; parity is covered by the kernel test suite).
+    decode_kernel: Optional[bool] = None
 
 
 @dataclass
@@ -129,7 +134,12 @@ class Engine:
         self._key = jax.random.PRNGKey(self.cfg.seed)
         assert self.mcfg.family in ('dense', 'vlm', 'moe'), \
             'engine serves paged-KV decoder-only families'
-        self._decode = jax.jit(model.decode_fn)
+        decode_kernel = self.cfg.decode_kernel
+        if decode_kernel is None:
+            decode_kernel = jax.default_backend() == 'tpu'
+        self._decode = jax.jit(
+            lambda p, c, b, k=decode_kernel: model.decode_fn(
+                p, c, b, use_pallas=k))
         chunk_fn = model.mod.prefill_chunk
         self._prefill_chunk = jax.jit(
             lambda p, c, b: chunk_fn(self.mcfg, p, c, b))

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.sharding import manual_shard_map
+
 
 def dequantize(q, scale):
     return q.astype(jnp.float32) * scale
@@ -70,9 +72,8 @@ def make_compressed_allreduce(mesh: Mesh, grad_specs,
                          is_leaf=lambda s: isinstance(s, P))
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(specs, specs), out_specs=(specs, specs),
-        check_vma=False)
+        manual_shard_map, mesh=mesh,
+        in_specs=(specs, specs), out_specs=(specs, specs))
     def reduce_fn(grads, err):
         flat_g, tdef = jax.tree.flatten(grads)
         flat_e = tdef.flatten_up_to(err)
