@@ -25,6 +25,7 @@ BENCHES = [
     ('colocation_matrix', 'paper Fig. 10 — 10 pairs × 6 strategies'),
     ('cluster_utilization', 'paper Fig. 8/9 — fleet utilization + savings'),
     ('roofline', 'supporting analysis — dry-run roofline table'),
+    ('serve_throughput', 'serving plane — batched prefill vs seed + node demo'),
 ]
 
 
@@ -49,6 +50,8 @@ def main():
                 mod.run(horizon_s=150.0)
             elif args.fast and name == 'miad_convergence':
                 mod.run(horizon_s=150.0)
+            elif args.fast and name == 'serve_throughput':
+                mod.run(steps=100)
             else:
                 mod.run()
         except Exception:

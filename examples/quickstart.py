@@ -31,14 +31,16 @@ def main():
     params = model.init_params(jax.random.PRNGKey(0))
 
     # reservation starts at one 8-page handle: the online burst (9 pages)
-    # overflows it, forcing the compute-first reclamation path
-    pool = KVPool(n_handles=12, pages_per_handle=8, page_size=4,
+    # overflows it, forcing the compute-first reclamation path.  The pool is
+    # sized so every offline handle holds live pages — the reclaimed handle
+    # must invalidate offline requests, exercising the recompute contract
+    pool = KVPool(n_handles=4, pages_per_handle=8, page_size=4,
                   reserved_handles=1)
     clock = VirtualClock()
-    offline = None
 
-    rt = ValveRuntime(pool, RuntimeConfig(n_devices=1), clock=clock,
-                      on_invalidate=lambda inv: offline.on_pages_invalidated(inv))
+    # no callback wiring needed: the runtime fans invalidations out to the
+    # engine owning each request (engines bind at submit time)
+    rt = ValveRuntime(pool, RuntimeConfig(n_devices=1), clock=clock)
     online = Engine(model, params, pool,
                     EngineConfig(max_batch=4, max_seq=64, prefill_chunk=16,
                                  klass='online'), runtime=rt, clock=clock)
@@ -61,9 +63,10 @@ def main():
     offline2 = Engine(model, params, pool,
                       EngineConfig(max_batch=4, max_seq=64, prefill_chunk=16,
                                    klass='offline'), runtime=rt, clock=clock)
-    rt.reclaimer.on_invalidate = offline2.on_pages_invalidated
     rids = [offline2.submit(p, max_new_tokens=10) for p in prompts]
-    for _ in range(12):
+    # a few steps only: the batched scheduler prefills all three requests in
+    # one mixed dispatch, so they are mid-generation when the burst arrives
+    for _ in range(4):
         offline2.step()
 
     # online burst arrives: gates close, memory reclaimed from offline

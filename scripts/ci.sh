@@ -15,6 +15,20 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 echo "== jax version: $(python -c 'import jax; print(jax.__version__)')"
 
+echo "== valve patch surface =="
+# single source of truth for the count lives in tests/test_patch_surface.py
+python - <<'PY'
+import sys
+sys.path.insert(0, 'tests')
+from test_patch_surface import patch_loc
+loc = patch_loc()
+print(f'framework-side patch: {loc} LOC (paper Table 1 contract: < 20)')
+assert 0 < loc < 20, loc
+PY
+
+echo "== node demo smoke (heterogeneous colocation) =="
+python -m repro.launch.serve --steps 50
+
 echo "== kernel parity (fast subset, interpret mode) =="
 python -m pytest -q \
     tests/test_kernels_flash.py \

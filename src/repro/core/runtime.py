@@ -56,6 +56,11 @@ class ValveRuntime:
         self.cfg = cfg or RuntimeConfig()
         self.clock = clock or RealClock()
         self.pool = pool
+        # invalidation fan-out: request id → the owning engine's callback.
+        # Engines bind at submit / unbind at finish; ids with no binding fall
+        # back to the legacy single ``on_invalidate`` callback (if any).
+        self._invalidation_route: Dict[str, InvalidationCallback] = {}
+        self._invalidation_fallback = on_invalidate
         self.gates = GateGroup(
             [DeviceGate(i, self.cfg.gate_op_latency_s)
              for i in range(self.cfg.n_devices)],
@@ -69,9 +74,36 @@ class ValveRuntime:
         self.reclaimer = ReclamationController(
             pool,
             gate_is_closed=lambda: self.gates.all_disabled,
-            on_invalidate=on_invalidate,
+            on_invalidate=self._route_invalidation,
             policy=self.cfg.policy)
         self.stats = RuntimeStats()
+
+    # ------------------------------------------------------------------
+    # Invalidation fan-out (multi-engine nodes: each invalidated request
+    # is surfaced to the engine that owns it, not one global callback)
+    # ------------------------------------------------------------------
+    def bind_invalidation(self, req_id: str, cb: InvalidationCallback) -> None:
+        self._invalidation_route[req_id] = cb
+
+    def unbind_invalidation(self, req_id: str) -> None:
+        self._invalidation_route.pop(req_id, None)
+
+    def _route_invalidation(self, invalidated: Dict[str, List[int]]) -> None:
+        """Split one reclamation's {req: pages} by owning engine and deliver
+        each group through that engine's bound callback (one call per engine,
+        preserving the single-callback patch-surface contract per engine)."""
+        groups: Dict[InvalidationCallback, Dict[str, List[int]]] = {}
+        unrouted: Dict[str, List[int]] = {}
+        for rid, pages in invalidated.items():
+            cb = self._invalidation_route.get(rid)
+            if cb is None:
+                unrouted[rid] = pages
+            else:
+                groups.setdefault(cb, {})[rid] = pages
+        for cb, group in groups.items():
+            cb(group)
+        if unrouted and self._invalidation_fallback is not None:
+            self._invalidation_fallback(unrouted)
 
     # ------------------------------------------------------------------
     # Online engine hooks (the online framework calls these; total patch

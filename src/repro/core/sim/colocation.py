@@ -39,6 +39,11 @@ class SimConfig:
     t_decode_gap: float = 0.002
     online_max_batch: int = 32
     miad_tick: float = 0.25          # MIAD/lifecycle maintenance cadence
+    # -- watchdogs (long-horizon workloads tune these instead of tripping
+    # the defaults) --
+    watchdog_guard_steps: int = 50_000_000   # hard non-termination assert
+    watchdog_stall_steps: int = 20_000       # zero-advance loops before forcing
+    watchdog_force_step_s: float = 0.001     # forced clock step on a stall
 
 
 @dataclass
@@ -343,13 +348,14 @@ class NodeSim:
         last_now = -1.0
         while True:
             guard += 1
-            assert guard < 50_000_000, 'sim did not terminate'
+            assert guard < self.cfg.watchdog_guard_steps, \
+                'sim did not terminate'
             # watchdog: if the clock stops advancing (degenerate zero-length
-            # dispatch loops), force a 1 ms step rather than livelock
+            # dispatch loops), force a step rather than livelock
             if self.now <= last_now + 1e-12:
                 stall += 1
-                if stall > 20_000:
-                    self.now = last_now + 0.001
+                if stall > self.cfg.watchdog_stall_steps:
+                    self.now = last_now + self.cfg.watchdog_force_step_s
                     stall = 0
             else:
                 stall = 0

@@ -1,0 +1,191 @@
+"""Node orchestrator — one node's engines behind one ValveRuntime.
+
+Valve's deployment unit is a *node*: one latency-critical ONLINE engine plus
+N throughput OFFLINE engines — possibly of **different models** — sharing
+one GPU's compute (dispatch gates) and KV memory (one :class:`KVPool`)
+through one :class:`ValveRuntime`.  ``launch/serve.py`` used to hand-roll a
+two-engine alternation loop; this module owns that loop and drives it from
+*gate state*:
+
+- the online engine dispatches whenever it has work (its lifecycle
+  notifications close the gates, preempting offline compute);
+- offline engines backfill whenever the gates are open (woken by the
+  runtime after ``T_cool`` of continuous online idle), round-robin across
+  engines so heterogeneous offline models share the harvested capacity;
+- ``runtime.tick()`` runs every step (MIAD reservation + wake-up checks).
+
+Invalidation callbacks fan out per owning engine through the runtime's
+request-id → engine routing (``bind_invalidation``), so N engines each keep
+their own < 20-LOC patch surface — no shared callback plumbing in drivers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.runtime import ValveRuntime
+from repro.models.api import build_model
+from repro.serving.engine import Engine, EngineConfig
+
+
+@dataclass
+class NodeStats:
+    steps: int = 0
+    online_dispatches: int = 0
+    offline_dispatches: int = 0
+    gated_skips: int = 0            # offline had work but gates were closed
+    idle_steps: int = 0             # nothing dispatched this step
+
+
+class NodeOrchestrator:
+    """Registers engines over one shared runtime and drives the node loop."""
+
+    def __init__(self, runtime: ValveRuntime, *, idle_advance: float = 1e-3):
+        self.runtime = runtime
+        self.clock = runtime.clock
+        self.pool = runtime.pool
+        self.online: Optional[Engine] = None
+        self.offline: List[Engine] = []
+        self.names: Dict[str, Engine] = {}
+        self.stats = NodeStats()
+        # on steps where nothing dispatched, sleep this long so continuous
+        # idle can accumulate to T_cool and wake offline (a busy-spinning
+        # drive loop would otherwise re-check the gates microseconds apart
+        # and starve offline forever — and a VirtualClock would never
+        # advance at all, livelocking drain()); works for both clock kinds
+        self.idle_advance = idle_advance
+        self._rr = 0                # round-robin cursor over offline engines
+
+    # ------------------------------------------------------------------
+    # Registration
+    # ------------------------------------------------------------------
+    def register(self, engine: Engine, name: Optional[str] = None) -> Engine:
+        """Register a pre-built engine (must share this node's runtime)."""
+        assert engine.runtime is self.runtime, \
+            'engine must be built on this node\'s runtime'
+        assert engine.mcfg.page_size == self.pool.page_size, \
+            (engine.mcfg.page_size, self.pool.page_size)
+        if engine.cfg.klass == 'online':
+            assert self.online is None, 'one online engine per node'
+            self.online = engine
+        else:
+            self.offline.append(engine)
+        name = name or f'{engine.cfg.klass}:{engine.mcfg.name}' \
+                       f'#{len(self.names)}'
+        assert name not in self.names, f'duplicate engine name {name!r}'
+        self.names[name] = engine
+        return engine
+
+    def add_engine(self, model_cfg, engine_cfg: EngineConfig, *,
+                   params=None, seed: int = 0,
+                   name: Optional[str] = None) -> Engine:
+        """Build a model + engine on this node's runtime and register it.
+        Heterogeneous colocation = calling this with different model configs
+        (page_size must match the shared pool)."""
+        model = build_model(model_cfg)
+        if params is None:
+            params = model.init_params(jax.random.PRNGKey(seed))
+        eng = Engine(model, params, None, engine_cfg,
+                     runtime=self.runtime, clock=self.clock)
+        return self.register(eng, name)
+
+    @property
+    def engines(self) -> List[Engine]:
+        return ([self.online] if self.online is not None else []) + \
+            list(self.offline)
+
+    # ------------------------------------------------------------------
+    # Drive loop
+    # ------------------------------------------------------------------
+    def has_work(self) -> bool:
+        return any(e.queue or e.running for e in self.engines)
+
+    def step(self) -> bool:
+        """One node tick: online first, offline backfill iff gates open."""
+        self.stats.steps += 1
+        progressed = False
+        if self.online is not None and (self.online.queue
+                                        or self.online.running):
+            if self.online.step():
+                progressed = True
+                self.stats.online_dispatches += 1
+        if any(e.queue or e.running for e in self.offline):
+            if self.runtime.offline_may_dispatch():
+                # round-robin: try each offline engine once, dispatch the
+                # first that makes progress (a memory-blocked engine does
+                # not starve its siblings)
+                n = len(self.offline)
+                for _ in range(n):
+                    eng = self.offline[self._rr % n]
+                    self._rr += 1
+                    if not (eng.queue or eng.running):
+                        continue
+                    if eng.step():
+                        progressed = True
+                        self.stats.offline_dispatches += 1
+                        break
+            else:
+                self.stats.gated_skips += 1
+        self.runtime.tick()
+        if not progressed:
+            self.stats.idle_steps += 1
+            if self.idle_advance > 0:
+                self.clock.sleep(self.idle_advance)
+        return progressed
+
+    def run(self, steps: int) -> None:
+        for _ in range(steps):
+            self.step()
+
+    def drain(self, max_steps: int = 100_000) -> None:
+        """Run until every engine's queue and batch are empty."""
+        for _ in range(max_steps):
+            if not self.has_work():
+                return
+            self.step()
+        raise RuntimeError('drain exceeded max_steps')
+
+    # ------------------------------------------------------------------
+    # Metrics (the paper's Fig. 10 axes + serving-plane counters)
+    # ------------------------------------------------------------------
+    def metrics(self) -> Dict[str, object]:
+        on_fin = self.online.finished if self.online is not None else []
+        ttfts = [r.ttft for r in on_fin if r.ttft is not None]
+        tpots = [r.tpot for r in on_fin if r.tpot and r.tpot > 0]
+        off_tokens = sum(e.stats.tokens_generated for e in self.offline)
+        off_recomp = sum(e.stats.tokens_recomputed for e in self.offline)
+        rt = self.runtime
+        return {
+            'online_finished': len(on_fin),
+            'offline_finished': sum(len(e.finished) for e in self.offline),
+            'online_ttft_p50': float(np.median(ttfts)) if ttfts else None,
+            'online_tpot_p50': float(np.median(tpots)) if tpots else None,
+            'offline_tokens': off_tokens,
+            'offline_recomputed_tokens': off_recomp,
+            'online_dispatches': self.stats.online_dispatches,
+            'offline_dispatches': self.stats.offline_dispatches,
+            'gated_skips': self.stats.gated_skips,
+            'compute_preemptions': rt.stats.compute_preemptions,
+            'offline_wakeups': rt.stats.offline_wakeups,
+            'reclamations': rt.reclaimer.stats.reclamations,
+            'max_preemptions_per_request': max(
+                rt.lifecycle.stats.preempted_requests.values(), default=0),
+            'live_online_requests': len(self.pool.request_ids('online')),
+            'live_offline_requests': len(self.pool.request_ids('offline')),
+            'engines': {
+                name: {
+                    'arch': eng.mcfg.name,
+                    'klass': eng.cfg.klass,
+                    'finished': len(eng.finished),
+                    'tokens': eng.stats.tokens_generated,
+                    'dispatches': eng.stats.dispatches,
+                    'mixed_dispatches': eng.stats.mixed_dispatches,
+                    'live_pages': sum(
+                        len(self.pool.pages_of_request(r.req_id))
+                        for r in eng.requests.values()),
+                } for name, eng in self.names.items()
+            },
+        }

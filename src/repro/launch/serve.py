@@ -1,114 +1,141 @@
 """Live online-offline colocation driver (one node).
 
-An ONLINE engine (latency-critical, bursty arrivals) and an OFFLINE engine
-(throughput batch work) share one KV pool through the ValveRuntime:
+One ONLINE engine (latency-critical, bursty arrivals) and N OFFLINE engines
+(throughput batch work, **heterogeneous model configs**) share one KV pool
+and one set of dispatch gates through the :class:`NodeOrchestrator`:
 
 - online activity closes the offline compute gates (≤ 1 preemption per
-  online request, wake after T_cool);
+  online request, wake after T_cool); offline backfills whenever the gates
+  are open — the loop is driven from gate state, not ad-hoc alternation;
 - online memory pressure reclaims offline handles (compute-first, quarantine
-  remap, the < 20-LOC invalidation callback resets offline requests);
+  remap); invalidations fan out to the owning engine's < 20-LOC callback;
 - MIAD keeps the online reservation tracking demand.
 
 Reports TTFT / TPOT for online and tokens/s for offline — the same metrics
 the paper's Fig. 10 uses; benchmarks/colocation_matrix.py runs the full
-strategy grid in simulation.
+strategy grid in simulation, benchmarks/serve_throughput.py measures this
+driver.
 
+    # heterogeneous demo: online qwen3-0.6b + offline qwen3-0.6b AND
+    # offline internlm2-1.8b (reduced) on one pool
     PYTHONPATH=src python -m repro.launch.serve --steps 400
+
+    # pick the offline models explicitly (repeatable flag)
+    PYTHONPATH=src python -m repro.launch.serve \\
+        --offline-arch internlm2-1.8b --offline-arch qwen3-0.6b
 """
 from __future__ import annotations
 
 import argparse
-from typing import Optional
+from typing import Optional, Sequence
 
-import jax
 import numpy as np
 
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.core.clock import RealClock
 from repro.core.runtime import RuntimeConfig, ValveRuntime
-from repro.models.api import build_model
-from repro.serving.engine import Engine, EngineConfig
+from repro.launch.node import NodeOrchestrator
+from repro.serving.engine import EngineConfig
 from repro.serving.kvpool import KVPool
 
+DEFAULT_OFFLINE_ARCHS = ('qwen3-0.6b', 'internlm2-1.8b')
 
-def serve_demo(*, arch: str = 'qwen3-0.6b', steps: int = 400,
-               online_rate: float = 0.08, burst_every: int = 120,
-               seed: int = 0, clock=None, quiet: bool = False):
-    """Drive both engines for ``steps`` scheduler ticks; returns metrics."""
-    rng = np.random.default_rng(seed)
-    cfg = reduce_cfg(get_config(arch), page_size=4)
-    model = build_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(seed))
 
-    pool = KVPool(n_handles=24, pages_per_handle=8, page_size=4,
+def build_node(*, arch: str = 'qwen3-0.6b',
+               offline_archs: Sequence[str] = DEFAULT_OFFLINE_ARCHS,
+               seed: int = 0, clock=None, page_size: int = 4,
+               max_prefill_reqs: int = 4,
+               piggyback_decode: bool = True,
+               idle_advance: float = 1e-3) -> NodeOrchestrator:
+    """One node: online ``arch`` + one offline engine per ``offline_archs``
+    entry (heterogeneous model configs over one pool/runtime)."""
+    pool = KVPool(n_handles=24, pages_per_handle=8, page_size=page_size,
                   reserved_handles=2)
     clock = clock or RealClock()
-    online_eng: Optional[Engine] = None
-    offline_eng: Optional[Engine] = None
-
-    def on_invalidate(inv):
-        offline_eng.on_pages_invalidated(inv)
-
     rt = ValveRuntime(pool, RuntimeConfig(n_devices=1, t_cool_init=0.002),
-                      clock=clock, on_invalidate=on_invalidate)
-    online_eng = Engine(model, params,
-                        pool, EngineConfig(max_batch=8, max_seq=96,
-                                           prefill_chunk=16, klass='online'),
-                        runtime=rt, clock=clock)
-    offline_eng = Engine(model, params,
-                         pool, EngineConfig(max_batch=8, max_seq=96,
-                                            prefill_chunk=16,
-                                            klass='offline'),
-                         runtime=rt, clock=clock)
+                      clock=clock)
+    node = NodeOrchestrator(rt, idle_advance=idle_advance)
 
-    # offline backlog: long prompts, long generations
-    for _ in range(12):
-        offline_eng.submit(rng.integers(1, cfg.vocab_size, 24).tolist(),
-                           max_new_tokens=24)
+    def ecfg(klass: str) -> EngineConfig:
+        return EngineConfig(max_batch=8, max_seq=96, prefill_chunk=16,
+                            max_prefill_reqs=max_prefill_reqs,
+                            piggyback_decode=piggyback_decode, klass=klass)
+
+    node.add_engine(reduce_cfg(get_config(arch), page_size=page_size),
+                    ecfg('online'), seed=seed, name=f'online:{arch}')
+    for i, oarch in enumerate(offline_archs):
+        node.add_engine(reduce_cfg(get_config(oarch), page_size=page_size),
+                        ecfg('offline'), seed=seed + i,
+                        name=f'offline{i}:{oarch}')
+    return node
+
+
+def serve_demo(*, arch: str = 'qwen3-0.6b',
+               offline_archs: Sequence[str] = DEFAULT_OFFLINE_ARCHS,
+               steps: int = 400, online_rate: float = 0.08,
+               burst_every: int = 120, seed: int = 0, clock=None,
+               quiet: bool = False, max_prefill_reqs: int = 4,
+               piggyback_decode: bool = True,
+               node: Optional[NodeOrchestrator] = None):
+    """Drive the node for ``steps`` scheduler ticks; returns metrics.
+
+    A prebuilt ``node`` takes precedence: the build kwargs (``arch``,
+    ``offline_archs``, ``max_prefill_reqs``, ``piggyback_decode``,
+    ``clock``) only apply when this function builds the node itself.
+    """
+    rng = np.random.default_rng(seed)
+    node = node or build_node(arch=arch, offline_archs=offline_archs,
+                              seed=seed, clock=clock,
+                              max_prefill_reqs=max_prefill_reqs,
+                              piggyback_decode=piggyback_decode)
+    online_eng = node.online
+
+    # offline backlog: long prompts, long generations, spread round-robin
+    # across the (heterogeneous) offline engines
+    for i in range(6 * len(node.offline)):
+        eng = node.offline[i % len(node.offline)]
+        eng.submit(rng.integers(1, eng.mcfg.vocab_size, 24).tolist(),
+                   max_new_tokens=24)
 
     for t in range(steps):
         # bursty online arrivals: poisson background + periodic spike
+        # (an offline-only prebuilt node simply gets no arrivals)
         n_new = rng.poisson(online_rate) + (3 if t % burst_every == 0 else 0)
-        for _ in range(n_new):
-            online_eng.submit(rng.integers(1, cfg.vocab_size, 12).tolist(),
-                              max_new_tokens=8)
-        if online_eng.queue or online_eng.running:
-            online_eng.step()
-        else:
-            offline_eng.step()
-        rt.tick()
+        for _ in range(n_new if online_eng is not None else 0):
+            online_eng.submit(
+                rng.integers(1, online_eng.mcfg.vocab_size, 12).tolist(),
+                max_new_tokens=8)
+        node.step()
+    # arrivals over: drain the remaining (mostly offline) backlog so the
+    # throughput metrics reflect completed work, not a truncated run
+    node.drain()
 
-    rt.check_invariants()
-    on_fin = online_eng.finished
-    off_fin = offline_eng.finished
-    ttfts = [r.ttft for r in on_fin if r.ttft is not None]
-    tpots = [r.tpot for r in on_fin if r.tpot and r.tpot > 0]
-    metrics = {
-        'online_finished': len(on_fin),
-        'offline_finished': len(off_fin),
-        'online_ttft_p50': float(np.median(ttfts)) if ttfts else None,
-        'online_tpot_p50': float(np.median(tpots)) if tpots else None,
-        'offline_tokens': offline_eng.stats.tokens_generated,
-        'offline_recomputed_tokens': offline_eng.stats.tokens_recomputed,
-        'compute_preemptions': rt.stats.compute_preemptions,
-        'offline_wakeups': rt.stats.offline_wakeups,
-        'reclamations': rt.reclaimer.stats.reclamations,
-        'max_preemptions_per_request': max(
-            rt.lifecycle.stats.preempted_requests.values(), default=0),
-    }
+    node.runtime.check_invariants()
+    metrics = node.metrics()
     if not quiet:
         for k, v in metrics.items():
-            print(f'  {k}: {v}')
+            if k == 'engines':
+                for name, em in v.items():
+                    print(f'  engine {name}: {em}')
+            else:
+                print(f'  {k}: {v}')
     return metrics
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument('--arch', default='qwen3-0.6b')
+    ap.add_argument('--arch', default='qwen3-0.6b',
+                    help='online engine architecture')
+    ap.add_argument('--offline-arch', action='append', default=None,
+                    help='offline engine architecture (repeatable; default: '
+                         f'{" + ".join(DEFAULT_OFFLINE_ARCHS)})')
     ap.add_argument('--steps', type=int, default=400)
     ap.add_argument('--seed', type=int, default=0)
     args = ap.parse_args()
-    serve_demo(arch=args.arch, steps=args.steps, seed=args.seed)
+    serve_demo(arch=args.arch,
+               offline_archs=tuple(args.offline_arch or
+                                   DEFAULT_OFFLINE_ARCHS),
+               steps=args.steps, seed=args.seed)
 
 
 if __name__ == '__main__':

@@ -1,92 +1,56 @@
 """Continuous-batching inference engine with the Valve patch surface.
 
-A production-shaped engine (vLLM-style): FIFO admission, paged KV through the
-global pool (page 0 = quarantine), chunked prefill, one-token decode
-iterations over the running batch.  Padding keeps all dispatches at fixed
-shapes so each entry point compiles once.
+The execution layer of the serving plane.  Scheduling policy lives in
+:mod:`repro.serving.scheduler` (:class:`BatchScheduler` composes each
+dispatch: budgeted multi-request chunked prefill + piggybacked decode
+slots); this module turns a :class:`ScheduledBatch` into one fixed-shape
+JAX dispatch over preallocated host buffers, so each entry point compiles
+once and no step reallocates numpy arrays.
 
 Valve integration points (and *only* these — Table 1's deployability claim):
 
 - **online side**: lifecycle notifications (`runtime.on_online_*`) around
   requests/iterations, and page allocation through the runtime;
-- **offline side**: a gate check before each dispatch unit (decode iteration
-  or prefill chunk), and the < 20-LOC invalidation patch
-  (:meth:`Engine.on_pages_invalidated` — counted by
+- **offline side**: a gate check before each dispatch unit (a mixed
+  prefill+decode iteration or a pure decode iteration), and the < 20-LOC
+  invalidation patch (:meth:`Engine.on_pages_invalidated` — counted by
   ``tests/test_patch_surface.py``).
 """
 from __future__ import annotations
 
-import enum
 import itertools
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.clock import RealClock
-from repro.models import dense
-from repro.models.api import Model
 from repro.serving.kvpool import QUARANTINE_PAGE
 from repro.serving.sampler import sample
+from repro.serving.scheduler import (
+    BatchScheduler, DecodeSlot, Request, ReqState, ScheduledBatch,
+    SchedulerConfig)
 
-I32 = jnp.int32
+# re-exported for compatibility: request bookkeeping moved to scheduler.py
+__all__ = ['Engine', 'EngineConfig', 'EngineStats', 'Request', 'ReqState']
 
-
-class ReqState(enum.Enum):
-    WAITING = 'waiting'
-    PREFILL = 'prefill'
-    RUNNING = 'running'
-    FINISHED = 'finished'
-
-
-@dataclass
-class Request:
-    req_id: str
-    prompt: List[int]
-    max_new_tokens: int
-    state: ReqState = ReqState.WAITING
-    generated: List[int] = field(default_factory=list)
-    pages: List[int] = field(default_factory=list)
-    n_prefilled: int = 0
-    recomputes: int = 0
-    t_submit: float = 0.0
-    t_first_token: Optional[float] = None
-    t_last_token: Optional[float] = None
-    decode_steps: int = 0
-
-    @property
-    def context(self) -> List[int]:
-        """Prompt + already-generated tokens (what recompute re-prefills)."""
-        return self.prompt + self.generated
-
-    @property
-    def target_len(self) -> int:
-        return len(self.prompt) + self.max_new_tokens
-
-    # -- latency metrics ---------------------------------------------------
-    @property
-    def ttft(self) -> Optional[float]:
-        if self.t_first_token is None:
-            return None
-        return self.t_first_token - self.t_submit
-
-    @property
-    def tpot(self) -> Optional[float]:
-        if self.t_last_token is None or self.t_first_token is None:
-            return None
-        n = len(self.generated) - 1
-        if n <= 0:
-            return 0.0
-        return (self.t_last_token - self.t_first_token) / n
+# engine-instance discriminator for generated request ids: the pool and the
+# runtime's invalidation router are keyed by request id NODE-wide, so two
+# engines of the same class must never mint colliding ids
+_ENGINE_SEQ = itertools.count()
 
 
 @dataclass
 class EngineConfig:
     max_batch: int = 8
     max_seq: int = 512              # prompt + generation budget per request
-    prefill_chunk: int = 64         # offline preemptible dispatch unit
+    prefill_chunk: int = 64         # per-request prefill tokens per dispatch
+    max_prefill_reqs: int = 4       # prefill rows per mixed dispatch
+    # total prefill tokens per dispatch; None → max_prefill_reqs × chunk
+    prefill_budget: Optional[int] = None
+    piggyback_decode: bool = True   # decode slots ride along with prefill
     temperature: float = 0.0
     seed: int = 0
     klass: str = 'offline'          # 'online' | 'offline'
@@ -97,12 +61,21 @@ class EngineConfig:
     # only slow CPU runs down; parity is covered by the kernel test suite).
     decode_kernel: Optional[bool] = None
 
+    def scheduler_config(self) -> SchedulerConfig:
+        return SchedulerConfig(
+            max_batch=self.max_batch, chunk=self.prefill_chunk,
+            max_prefill_reqs=min(self.max_prefill_reqs, self.max_batch),
+            prefill_budget=self.prefill_budget,
+            piggyback_decode=self.piggyback_decode)
+
 
 @dataclass
 class EngineStats:
     steps: int = 0
-    prefill_chunks: int = 0
-    decode_iterations: int = 0
+    dispatches: int = 0             # actual device dispatches issued
+    mixed_dispatches: int = 0       # dispatches carrying ≥1 prefill slot
+    prefill_chunks: int = 0         # prefill slots executed (per-request)
+    decode_iterations: int = 0      # dispatches carrying ≥1 decode slot
     tokens_generated: int = 0
     tokens_recomputed: int = 0
     invalidations: int = 0
@@ -112,7 +85,7 @@ class EngineStats:
 class Engine:
     """One engine = one model instance on one node's devices."""
 
-    def __init__(self, model: Model, params, pool,
+    def __init__(self, model, params, pool,
                  cfg: Optional[EngineConfig] = None, *,
                  runtime=None, clock=None):
         self.model = model
@@ -120,16 +93,24 @@ class Engine:
         self.cfg = cfg or EngineConfig()
         self.params = params
         self.runtime = runtime
+        # with a runtime, the node-shared pool is authoritative; passing a
+        # DIFFERENT pool alongside it would silently serve divergent state
+        assert runtime is None or pool is None or pool is runtime.pool, \
+            'pool conflicts with runtime.pool'
         self.pool = runtime.pool if runtime is not None else pool
         assert self.pool is not None, 'engine needs a KVPool or a runtime'
         self.clock = clock or (runtime.clock if runtime else RealClock())
         self.cache = model.init_cache(None, engine_pages=self.pool.n_pages)
         self.pg = self.mcfg.page_size
         self.maxp = self.cfg.max_seq // self.pg
+        self._seq = next(_ENGINE_SEQ)
         self._ids = itertools.count()
         self.requests: Dict[str, Request] = {}
-        self.queue: List[str] = []       # FIFO waiting queue
-        self.running: List[str] = []     # admitted (PREFILL or RUNNING)
+        self.sched = BatchScheduler(self.cfg.scheduler_config())
+        # the scheduler owns the lists; the engine (and the Valve patch)
+        # aliases them — same objects, never rebound
+        self.queue: List[str] = self.sched.queue
+        self.running: List[str] = self.sched.running
         self.stats = EngineStats()
         self._key = jax.random.PRNGKey(self.cfg.seed)
         assert self.mcfg.family in ('dense', 'vlm', 'moe'), \
@@ -141,21 +122,46 @@ class Engine:
             lambda p, c, b, k=decode_kernel: model.decode_fn(
                 p, c, b, use_pallas=k))
         chunk_fn = model.mod.prefill_chunk
-        self._prefill_chunk = jax.jit(
+        self._mixed = jax.jit(
             lambda p, c, b: chunk_fn(self.mcfg, p, c, b))
+        self._init_buffers()
+
+    def _init_buffers(self) -> None:
+        """Preallocate the fixed-shape host staging buffers (one mixed
+        dispatch shape, one decode dispatch shape) — filled in place each
+        step, never reallocated."""
+        b, c = self.cfg.max_batch, self.cfg.prefill_chunk
+        self._mix = {
+            'toks': np.zeros((b, c), np.int32),
+            'poss': np.zeros((b, c), np.int32),
+            'pids': np.zeros((b, c), np.int32),
+            'offs': np.zeros((b, c), np.int32),
+            'pts': np.zeros((b, self.maxp), np.int32),
+            'kv_len': np.zeros((b,), np.int32),
+            'last_idx': np.zeros((b,), np.int32),
+        }
+        self._dec = {
+            'toks': np.zeros((b,), np.int32),
+            'poss': np.zeros((b,), np.int32),
+            'pts': np.zeros((b, self.maxp), np.int32),
+        }
 
     # ------------------------------------------------------------------
     # Submission
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 32,
                req_id: Optional[str] = None) -> str:
-        rid = req_id or f'{self.cfg.klass}-{next(self._ids)}'
+        rid = req_id or f'{self.cfg.klass}{self._seq}-{next(self._ids)}'
+        assert len(prompt) > 0, 'empty prompt'
         assert len(prompt) + max_new_tokens <= self.cfg.max_seq, \
             (len(prompt), max_new_tokens, self.cfg.max_seq)
         req = Request(rid, list(map(int, prompt)), max_new_tokens,
                       t_submit=self.clock.now())
         self.requests[rid] = req
-        self.queue.append(rid)
+        self.sched.submit(rid)
+        if self.runtime is not None:
+            # invalidation fan-out: route this request's callbacks here
+            self.runtime.bind_invalidation(rid, self.on_pages_invalidated)
         return rid
 
     # ------------------------------------------------------------------
@@ -166,7 +172,10 @@ class Engine:
     def on_pages_invalidated(self, invalidated: Dict[str, List[int]]) -> None:
         for rid in invalidated:
             req = self.requests.get(rid)
-            if req is None or req.state == ReqState.FINISHED:
+            # skip finished and already-queued ids (a queued request holds no
+            # pages, so its id here can only be a duplicate delivery)
+            if req is None or req.state == ReqState.FINISHED \
+                    or rid in self.queue:
                 continue
             req.pages = []
             req.n_prefilled = 0
@@ -192,10 +201,10 @@ class Engine:
     def _free(self, rid: str) -> None:
         self.pool.free(rid)
 
-    def _page_table(self, req: Request) -> np.ndarray:
-        pt = np.full((self.maxp,), QUARANTINE_PAGE, np.int32)
-        pt[: len(req.pages)] = req.pages
-        return pt
+    def _fill_page_table(self, row: np.ndarray, req: Request) -> np.ndarray:
+        row.fill(QUARANTINE_PAGE)
+        row[: len(req.pages)] = req.pages
+        return row
 
     # ------------------------------------------------------------------
     # Scheduling step
@@ -204,101 +213,136 @@ class Engine:
         return (self.cfg.klass == 'offline' and self.runtime is not None
                 and not self.runtime.offline_may_dispatch())
 
-    def _admit(self) -> None:
-        while self.queue and len(self.running) < self.cfg.max_batch:
-            rid = self.queue[0]
-            req = self.requests[rid]
-            need = -(-req.target_len // self.pg)
-            # lifecycle first: the request's arrival closes the gates BEFORE
-            # any allocation can trigger reclamation (one preemption covers
-            # both, and the wake check can't reopen gates mid-admission)
+    def _try_admit(self, req: Request) -> Optional[List[int]]:
+        """Admission callback for the scheduler: lifecycle + allocation."""
+        need = -(-req.target_len // self.pg)
+        # lifecycle first: the request's arrival closes the gates BEFORE
+        # any allocation can trigger reclamation (one preemption covers
+        # both, and the wake check can't reopen gates mid-admission)
+        if self.runtime is not None and self.cfg.klass == 'online':
+            self.runtime.on_online_request_start(req.req_id)
+        pages = self._alloc(req.req_id, need)
+        if pages is None:
             if self.runtime is not None and self.cfg.klass == 'online':
-                self.runtime.on_online_request_start(rid)
-            pages = self._alloc(rid, need)
-            if pages is None:
-                if self.runtime is not None and self.cfg.klass == 'online':
-                    self.runtime.on_online_request_end(rid)
-                break  # head-of-line blocks until memory frees up
-            self.queue.pop(0)
-            req.pages = pages
-            req.state = ReqState.PREFILL
-            req.n_prefilled = 0
-            self.running.append(rid)
+                self.runtime.on_online_request_end(req.req_id)
+        return pages
 
     def _finish(self, req: Request) -> None:
         req.state = ReqState.FINISHED
         self.running.remove(req.req_id)
         self._free(req.req_id)
         req.pages = []
-        if self.runtime is not None and self.cfg.klass == 'online':
-            self.runtime.on_online_request_end(req.req_id)
+        if self.runtime is not None:
+            self.runtime.unbind_invalidation(req.req_id)
+            if self.cfg.klass == 'online':
+                self.runtime.on_online_request_end(req.req_id)
 
-    # -- prefill -----------------------------------------------------------
-    def _prefill_one(self, req: Request) -> None:
-        """Dispatch the next prefill chunk for ``req`` (fixed chunk shape)."""
-        ctx = req.context
-        chunk = self.cfg.prefill_chunk
-        lo = req.n_prefilled
-        hi = min(lo + chunk, len(ctx))
-        toks = np.zeros((1, chunk), np.int32)
-        poss = np.full((1, chunk), max(hi - 1, 0), np.int32)
-        pids = np.full((1, chunk), QUARANTINE_PAGE, np.int32)
-        offs = np.zeros((1, chunk), np.int32)
-        n = hi - lo
-        toks[0, :n] = ctx[lo:hi]
-        poss[0, :n] = np.arange(lo, hi)
-        abs_pos = np.arange(lo, hi)
-        pt = self._page_table(req)
-        pids[0, :n] = pt[abs_pos // self.pg]
-        offs[0, :n] = abs_pos % self.pg
-        batch = {
-            'tokens': jnp.asarray(toks),
-            'positions': jnp.asarray(poss),
-            'page_table': jnp.asarray(pt[None]),
-            'page_ids': jnp.asarray(pids),
-            'offsets': jnp.asarray(offs),
-            'kv_len': jnp.asarray([hi], I32),
-            'last_idx': jnp.asarray([n - 1], I32),
-        }
-        self.cache, logits = self._prefill_chunk(self.params, self.cache, batch)
-        self.stats.prefill_chunks += 1
-        req.n_prefilled = hi
-        if hi == len(ctx):
-            req.state = ReqState.RUNNING
-            # the final chunk's logits predict the token after the context —
-            # the first token on a fresh prefill, the resume token after an
-            # invalidation recompute; either way we sample it here
-            tok = self._sample(logits)[0]
-            self._append_token(req, int(tok))
-
-    # -- decode -------------------------------------------------------------
-    def _decode_batch(self) -> None:
-        batch_reqs = [self.requests[r] for r in self.running
-                      if self.requests[r].state == ReqState.RUNNING]
-        if not batch_reqs:
-            return
-        bmax = self.cfg.max_batch
-        batch_reqs = batch_reqs[:bmax]
-        toks = np.zeros((bmax,), np.int32)
-        poss = np.zeros((bmax,), np.int32)
-        pts = np.full((bmax, self.maxp), QUARANTINE_PAGE, np.int32)
-        for i, req in enumerate(batch_reqs):
+    # -- mixed prefill(+decode) dispatch -------------------------------------
+    def _dispatch_mixed(self, batch: ScheduledBatch) -> None:
+        """Execute one composed dispatch through the chunked-prefill entry:
+        prefill rows write/attend their chunk; decode rows are one-token
+        chunks (embed the last sampled token, write its KV, predict the
+        next) — one fixed (max_batch × chunk) iteration for all of it."""
+        m = self._mix
+        m['toks'].fill(0)
+        m['poss'].fill(0)
+        m['pids'].fill(QUARANTINE_PAGE)
+        m['offs'].fill(0)
+        m['pts'].fill(QUARANTINE_PAGE)
+        m['kv_len'].fill(1)        # padding rows attend 1 quarantine slot
+        m['last_idx'].fill(0)
+        row = 0
+        for ps in batch.prefill:
+            req = self.requests[ps.req_id]
+            lo, hi = ps.start, ps.start + ps.length
+            pos = np.arange(lo, hi)
+            m['toks'][row, :ps.length] = req.context[lo:hi]
+            m['poss'][row, :ps.length] = pos
+            m['poss'][row, ps.length:] = hi - 1
+            pt = self._fill_page_table(m['pts'][row], req)
+            m['pids'][row, :ps.length] = pt[pos // self.pg]
+            m['offs'][row, :ps.length] = pos % self.pg
+            m['kv_len'][row] = hi
+            m['last_idx'][row] = ps.length - 1
+            row += 1
+        for ds in batch.decode:
+            req = self.requests[ds.req_id]
             # the last context token was sampled but its KV never written:
-            # decode embeds it, writes KV at its position, predicts the next
-            toks[i] = req.context[-1]
-            poss[i] = len(req.context) - 1
-            pts[i] = self._page_table(req)
+            # this row embeds it, writes KV at its position, predicts next
+            pos = len(req.context) - 1
+            m['toks'][row, 0] = req.context[-1]
+            m['poss'][row, :] = pos
+            pt = self._fill_page_table(m['pts'][row], req)
+            m['pids'][row, 0] = pt[pos // self.pg]
+            m['offs'][row, 0] = pos % self.pg
+            m['kv_len'][row] = pos + 1
+            m['last_idx'][row] = 0
+            row += 1
+        mb = {
+            'tokens': jnp.asarray(m['toks']),
+            'positions': jnp.asarray(m['poss']),
+            'page_table': jnp.asarray(m['pts']),
+            'page_ids': jnp.asarray(m['pids']),
+            'offsets': jnp.asarray(m['offs']),
+            'kv_len': jnp.asarray(m['kv_len']),
+            'last_idx': jnp.asarray(m['last_idx']),
+        }
+        online = self.runtime is not None and self.cfg.klass == 'online'
+        if online:
+            self.runtime.on_online_iteration_start()
+        self.cache, logits = self._mixed(self.params, self.cache, mb)
+        if online:
+            self.runtime.on_online_iteration_end()
+        self.stats.dispatches += 1
+        self.stats.mixed_dispatches += 1
+        self.stats.prefill_chunks += len(batch.prefill)
+        if batch.decode:
+            self.stats.decode_iterations += 1
+        new = np.asarray(self._sample(logits))
+        row = 0
+        for ps in batch.prefill:
+            req = self.requests[ps.req_id]
+            req.n_prefilled = ps.start + ps.length
+            if req.n_prefilled == len(req.context):
+                req.state = ReqState.RUNNING
+                # the final chunk's logits predict the token after the
+                # context — the first token on a fresh prefill, the resume
+                # token after an invalidation recompute
+                self._append_token(req, int(new[row]))
+            row += 1
+        for ds in batch.decode:
+            req = self.requests[ds.req_id]
+            req.decode_steps += 1
+            self._append_token(req, int(new[row]))
+            row += 1
+
+    # -- pure decode dispatch -------------------------------------------------
+    def _dispatch_decode(self, slots: List[DecodeSlot]) -> None:
+        """Decode-only iteration through the paged-attention fast path."""
+        d = self._dec
+        d['toks'].fill(0)
+        d['poss'].fill(0)
+        d['pts'].fill(QUARANTINE_PAGE)
+        for i, ds in enumerate(slots):
+            req = self.requests[ds.req_id]
+            d['toks'][i] = req.context[-1]
+            d['poss'][i] = len(req.context) - 1
+            self._fill_page_table(d['pts'][i], req)
         # padded slots write into quarantine (page 0) — harmless by design
-        db = {'tokens': jnp.asarray(toks), 'positions': jnp.asarray(poss),
-              'page_table': jnp.asarray(pts)}
-        if self.runtime is not None and self.cfg.klass == 'online':
+        db = {'tokens': jnp.asarray(d['toks']),
+              'positions': jnp.asarray(d['poss']),
+              'page_table': jnp.asarray(d['pts'])}
+        online = self.runtime is not None and self.cfg.klass == 'online'
+        if online:
             self.runtime.on_online_iteration_start()
         self.cache, logits = self._decode(self.params, self.cache, db)
-        if self.runtime is not None and self.cfg.klass == 'online':
+        if online:
             self.runtime.on_online_iteration_end()
+        self.stats.dispatches += 1
         self.stats.decode_iterations += 1
         new = np.asarray(self._sample(logits))
-        for i, req in enumerate(batch_reqs):
+        for i, ds in enumerate(slots):
+            req = self.requests[ds.req_id]
             req.decode_steps += 1
             self._append_token(req, int(new[i]))
 
@@ -327,18 +371,15 @@ class Engine:
         if self._gated():
             self.stats.blocked_dispatches += 1
             return False
-        self._admit()
+        batch = self.sched.schedule(self.requests, self._try_admit)
         self.stats.steps += 1
-        prefilling = [self.requests[r] for r in self.running
-                      if self.requests[r].state == ReqState.PREFILL]
-        if prefilling:
-            self._prefill_one(prefilling[0])
-            return True
-        if any(self.requests[r].state == ReqState.RUNNING
-               for r in self.running):
-            self._decode_batch()
-            return True
-        return False
+        if batch.empty:
+            return False
+        if batch.prefill:
+            self._dispatch_mixed(batch)
+        else:
+            self._dispatch_decode(batch.decode)
+        return True
 
     def run_to_completion(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):

@@ -67,6 +67,22 @@ class KVPool:
                 if self.owner[p] is not None}
 
     # ------------------------------------------------------------ queries
+    def pages_of_request(self, req_id: str) -> List[int]:
+        """Copy of a request's mapped pages, in allocation order."""
+        return list(self.pages_of.get(req_id, ()))
+
+    def handles_of_request(self, req_id: str) -> List[int]:
+        """Sorted handles holding ≥1 page of ``req_id`` (the handles whose
+        reclamation would invalidate it — orchestrator/test introspection)."""
+        return sorted({self.handle_of(p)
+                       for p in self.pages_of.get(req_id, ())})
+
+    def request_ids(self, klass: Optional[str] = None) -> List[str]:
+        """Live request ids holding pages, optionally filtered by class —
+        the node orchestrator's per-engine occupancy view."""
+        return [r for r in self.pages_of
+                if klass is None or self.klass_of.get(r) == klass]
+
     def free_pages_for(self, klass: str) -> int:
         if klass == 'online':
             hs = self.reserved.keys()
@@ -91,6 +107,10 @@ class KVPool:
               ) -> Optional[List[int]]:
         """Allocate ``n`` pages for ``req_id``; None if insufficient."""
         assert klass in ('online', 'offline')
+        # ids are node-global: a second alloc under a live id means two
+        # engines minted colliding request ids (their pages would merge)
+        assert req_id not in self.pages_of, \
+            f'request id {req_id!r} already holds pages'
         if klass == 'online':
             handles = list(self.reserved.keys())
         else:

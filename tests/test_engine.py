@@ -126,6 +126,94 @@ def test_invalidation_recompute_round_trip():
     pool2.check_invariants()
 
 
+def test_double_invalidation_no_duplicate_requeue():
+    """Regression: a double invalidation callback must not enqueue the same
+    request twice (the duplicate-requeue hazard in the Valve patch)."""
+    eng, _, pool, model, _ = _setup(pool_handles=10)
+    cfg = model.cfg
+    rng = np.random.default_rng(6)
+    rid = eng.submit(rng.integers(1, cfg.vocab_size, size=9).tolist(), 8)
+    for _ in range(20):
+        eng.step()
+        if len(eng.requests[rid].generated) >= 2:
+            break
+    inv = pool.reclaim_handles(pool.handles_of_request(rid))
+    assert rid in inv
+    eng.on_pages_invalidated(inv)
+    eng.on_pages_invalidated(inv)        # double delivery
+    assert eng.queue.count(rid) == 1
+    assert eng.requests[rid].state == ReqState.WAITING
+    # the duplicate must not double-count stats either
+    assert eng.stats.invalidations == 1
+    assert eng.requests[rid].recomputes == 1
+    assert eng.stats.tokens_recomputed == len(eng.requests[rid].context)
+    eng.run_to_completion()
+    assert len(eng.output_tokens(rid)) == 8
+    pool.check_invariants()
+
+
+def test_batched_prefill_composes_multiple_requests():
+    """One dispatch prefills several waiting requests (the seed did one
+    request at batch 1 per step)."""
+    eng, _, pool, model, _ = _setup()
+    cfg = model.cfg
+    rng = np.random.default_rng(4)
+    rids = [eng.submit(rng.integers(1, cfg.vocab_size, size=7).tolist(), 3)
+            for _ in range(3)]
+    assert eng.step() is True
+    assert eng.stats.dispatches == 1
+    assert eng.stats.prefill_chunks == 3         # three slots, one dispatch
+    for rid in rids:
+        req = eng.requests[rid]
+        assert req.state == ReqState.RUNNING
+        assert len(req.generated) == 1           # prefill emits first token
+    # next step decodes the whole batch together
+    eng.step()
+    assert eng.stats.decode_iterations == 1
+    assert all(len(eng.requests[r].generated) == 2 for r in rids)
+    eng.run_to_completion()
+    assert all(len(eng.output_tokens(r)) == 3 for r in rids)
+
+
+def test_mixed_prefill_decode_single_iteration():
+    """A late arrival prefills in the SAME iteration that decodes the
+    running batch (piggybacked decode slots)."""
+    eng, _, pool, model, _ = _setup()
+    cfg = model.cfg
+    rng = np.random.default_rng(5)
+    r1 = eng.submit(rng.integers(1, cfg.vocab_size, size=7).tolist(), 6)
+    eng.step()                                   # r1 prefilled → RUNNING
+    r2 = eng.submit(rng.integers(1, cfg.vocab_size, size=7).tolist(), 6)
+    mixed_before = eng.stats.mixed_dispatches
+    dispatches_before = eng.stats.dispatches
+    eng.step()
+    assert eng.stats.dispatches == dispatches_before + 1
+    assert eng.stats.mixed_dispatches == mixed_before + 1
+    assert len(eng.requests[r1].generated) == 2  # decoded in the mix
+    assert len(eng.requests[r2].generated) == 1  # prefilled in the mix
+
+
+def test_batched_prefill_reduces_steps_and_matches_outputs():
+    """Scheduler steps-to-completion drops vs the seed one-request-at-a-time
+    path, with identical greedy outputs."""
+    cfg_seed = EngineConfig(max_batch=4, max_seq=64, prefill_chunk=8,
+                            max_prefill_reqs=1, piggyback_decode=False)
+    cfg_batched = EngineConfig(max_batch=4, max_seq=64, prefill_chunk=8)
+    outs, steps = [], []
+    for ecfg in (cfg_seed, cfg_batched):
+        eng, _, pool, model, _ = _setup(engine_cfg=ecfg)
+        rng = np.random.default_rng(8)
+        rids = [eng.submit(rng.integers(1, model.cfg.vocab_size,
+                                        size=17).tolist(), 5)
+                for _ in range(4)]
+        eng.run_to_completion()
+        outs.append([eng.output_tokens(r) for r in rids])
+        steps.append(eng.stats.steps)
+        pool.check_invariants()
+    assert outs[0] == outs[1]                    # same greedy outputs
+    assert steps[1] < steps[0], steps            # measurably fewer steps
+
+
 def test_runtime_gating_blocks_offline():
     eng, rt, pool, model, _ = _setup(runtime=True)
     cfg = model.cfg

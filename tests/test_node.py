@@ -1,0 +1,143 @@
+"""NodeOrchestrator end-to-end: heterogeneous-model colocation over one
+pool/runtime, invalidation fan-out to the owning engine, gate-driven
+offline backfill, and the paper's ≤1-preemption-per-online-request bound."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.clock import VirtualClock
+from repro.core.runtime import RuntimeConfig, ValveRuntime
+from repro.launch.node import NodeOrchestrator
+from repro.serving.engine import EngineConfig
+from repro.serving.kvpool import KVPool
+
+ONLINE_ARCH = 'qwen3-0.6b'
+OFFLINE_ARCHS = ('internlm2-1.8b', 'qwen3-0.6b')
+
+
+def _ecfg(klass):
+    return EngineConfig(max_batch=4, max_seq=48, prefill_chunk=8,
+                        klass=klass)
+
+
+def _node(*, pool_handles=5, pph=4):
+    pool = KVPool(pool_handles, pph, page_size=4, reserved_handles=1)
+    clock = VirtualClock()
+    rt = ValveRuntime(pool, RuntimeConfig(n_devices=1, t_cool_init=0.002),
+                      clock=clock)
+    node = NodeOrchestrator(rt, idle_advance=1e-3)
+    node.add_engine(reduced(get_config(ONLINE_ARCH), page_size=4),
+                    _ecfg('online'), seed=0, name='online')
+    for i, arch in enumerate(OFFLINE_ARCHS):
+        node.add_engine(reduced(get_config(arch), page_size=4),
+                        _ecfg('offline'), seed=10 + i, name=f'off{i}')
+    return node
+
+
+def _submit_offline(node, rng):
+    """Two requests per offline engine (5 pages each → every offline handle
+    holds live pages, so reclamation must invalidate)."""
+    rids = []
+    for eng in node.offline:
+        for _ in range(2):
+            rids.append((eng, eng.submit(
+                rng.integers(1, eng.mcfg.vocab_size, 12).tolist(),
+                max_new_tokens=8)))
+    return rids
+
+
+def test_heterogeneous_colocation_end_to_end():
+    """One online qwen3-0.6b + two offline engines of *different* model
+    configs (internlm2-1.8b, qwen3-0.6b) share one KVPool through the
+    NodeOrchestrator; an online burst forces reclamation that invalidates
+    requests in BOTH offline engines; everything recovers and recomputes to
+    the undisturbed outputs."""
+    # undisturbed reference: same seeds, offline only
+    ref_node = _node()
+    ref_rids = _submit_offline(ref_node, np.random.default_rng(7))
+    ref_node.drain(max_steps=5000)
+    ref_outputs = [(e.mcfg.name, e.output_tokens(r)) for e, r in ref_rids]
+
+    # disturbed run: online burst lands mid-generation
+    node = _node()
+    rng = np.random.default_rng(7)
+    rids = _submit_offline(node, rng)
+    for _ in range(4):                    # all engines prefill + start decode
+        node.step()
+    # the burst: 28-token prompt + 12 new tokens = 10 pages, far beyond the
+    # 4-page reservation → reclaims 2 offline handles (compute-first)
+    on_rid = node.online.submit(
+        rng.integers(1, node.online.mcfg.vocab_size, 28).tolist(),
+        max_new_tokens=12)
+    node.drain(max_steps=5000)
+
+    # online completed, bounded interference
+    assert len(node.online.output_tokens(on_rid)) == 12
+    node.runtime.check_invariants()       # ≤1 compute preemption per request
+    assert node.runtime.stats.compute_preemptions <= 1
+    assert node.runtime.reclaimer.stats.reclamations >= 1
+
+    # the reclamation hit live pages in BOTH heterogeneous offline engines,
+    # and the fan-out routed each invalidation to the owning engine
+    invs = [e.stats.invalidations for e in node.offline]
+    assert all(v >= 1 for v in invs), invs
+
+    # every offline request finished and recomputed to the undisturbed
+    # output (greedy decoding is deterministic per engine/model)
+    got_outputs = [(e.mcfg.name, e.output_tokens(r)) for e, r in rids]
+    assert got_outputs == ref_outputs
+
+    # heterogeneity is real: the two offline engines serve different models
+    names = {e.mcfg.name for e in node.offline}
+    assert len(names) == 2, names
+    node.pool.check_invariants()
+
+
+def test_gate_driven_backfill_and_wakeup():
+    """Offline backfills only while gates are open; closed gates are
+    recorded as skips, and the runtime wakes offline after T_cool."""
+    node = _node(pool_handles=8)
+    rng = np.random.default_rng(3)
+    eng = node.offline[0]
+    eng.submit(rng.integers(1, eng.mcfg.vocab_size, 8).tolist(),
+               max_new_tokens=4)
+    # online request in flight → gates closed → offline must not dispatch
+    node.online.submit(
+        rng.integers(1, node.online.mcfg.vocab_size, 8).tolist(),
+        max_new_tokens=4)
+    node.step()
+    assert node.stats.online_dispatches == 1
+    assert node.stats.offline_dispatches == 0
+    assert node.stats.gated_skips == 1
+    node.drain(max_steps=2000)
+    assert node.stats.offline_dispatches > 0       # woke after T_cool
+    assert node.runtime.stats.offline_wakeups >= 1
+    assert len(eng.finished) == 1
+    node.runtime.check_invariants()
+
+
+def test_register_rejects_mismatched_engines():
+    node = _node()
+    with pytest.raises(AssertionError):
+        # second online engine on the same node
+        node.add_engine(reduced(get_config(ONLINE_ARCH), page_size=4),
+                        _ecfg('online'))
+    # page-size mismatch with the shared pool
+    with pytest.raises(AssertionError):
+        node.add_engine(reduced(get_config(ONLINE_ARCH), page_size=8),
+                        _ecfg('offline'))
+
+
+def test_node_metrics_shape():
+    node = _node()
+    rng = np.random.default_rng(5)
+    node.online.submit(
+        rng.integers(1, node.online.mcfg.vocab_size, 8).tolist(),
+        max_new_tokens=4)
+    node.drain(max_steps=1000)
+    m = node.metrics()
+    assert m['online_finished'] == 1
+    assert m['max_preemptions_per_request'] <= 1
+    assert set(m['engines']) == {'online', 'off0', 'off1'}
+    assert m['engines']['off0']['arch'].startswith('internlm2')

@@ -1,0 +1,169 @@
+"""Batch-composition scheduler policy: budgeted multi-request prefill,
+mixed prefill+decode dispatches, FIFO fairness under invalidation churn.
+
+Pure policy tests — no JAX, no tensors: the scheduler layer is engine-
+agnostic by construction."""
+from repro.serving.scheduler import (
+    BatchScheduler, Request, ReqState, SchedulerConfig)
+
+
+def _requests(*lens):
+    """n requests with the given context lengths, already submitted FIFO."""
+    reqs = {}
+    for i, n in enumerate(lens):
+        rid = f'r{i}'
+        reqs[rid] = Request(rid, list(range(1, n + 1)), max_new_tokens=4)
+    return reqs
+
+
+def _admit_all(req):
+    return [1] * 2          # pages; tests here never inspect them
+
+
+def _sched(requests, cfg):
+    s = BatchScheduler(cfg)
+    for rid in requests:
+        s.submit(rid)
+    return s
+
+
+def test_budget_fills_across_multiple_requests():
+    """The per-dispatch prefill budget is split FIFO across waiting
+    requests — not one request per step (the seed behavior)."""
+    reqs = _requests(40, 40, 40)
+    s = _sched(reqs, SchedulerConfig(max_batch=8, chunk=16,
+                                     max_prefill_reqs=4))
+    b = s.schedule(reqs, _admit_all)
+    assert [(p.req_id, p.start, p.length) for p in b.prefill] == \
+        [('r0', 0, 16), ('r1', 0, 16), ('r2', 0, 16)]
+    assert not b.decode
+    assert b.prefill_tokens == 48
+
+
+def test_budget_cap_truncates_tail_request():
+    reqs = _requests(40, 40)
+    s = _sched(reqs, SchedulerConfig(max_batch=8, chunk=16,
+                                     max_prefill_reqs=4, prefill_budget=24))
+    b = s.schedule(reqs, _admit_all)
+    assert [(p.req_id, p.length) for p in b.prefill] == \
+        [('r0', 16), ('r1', 8)]
+
+
+def test_max_prefill_reqs_caps_rows():
+    reqs = _requests(8, 8, 8, 8)
+    s = _sched(reqs, SchedulerConfig(max_batch=8, chunk=16,
+                                     max_prefill_reqs=2))
+    b = s.schedule(reqs, _admit_all)
+    assert len(b.prefill) == 2
+    assert {p.req_id for p in b.prefill} == {'r0', 'r1'}
+
+
+def test_chunk_progress_across_steps():
+    """Successive dispatches continue each request where it left off."""
+    reqs = _requests(40)
+    s = _sched(reqs, SchedulerConfig(max_batch=4, chunk=16))
+    b = s.schedule(reqs, _admit_all)
+    assert b.prefill[0].start == 0 and b.prefill[0].length == 16
+    reqs['r0'].n_prefilled = 16          # the engine would do this
+    b = s.compose(reqs)
+    assert b.prefill[0].start == 16 and b.prefill[0].length == 16
+    reqs['r0'].n_prefilled = 32
+    b = s.compose(reqs)
+    assert b.prefill[0].start == 32 and b.prefill[0].length == 8
+
+
+def test_decode_piggybacks_on_prefill_dispatch():
+    """RUNNING requests ride along in the same iteration as prefill rows."""
+    reqs = _requests(8, 8, 40)
+    s = _sched(reqs, SchedulerConfig(max_batch=8, chunk=16))
+    s.schedule(reqs, _admit_all)
+    reqs['r0'].state = ReqState.RUNNING   # finished prefill, now decoding
+    reqs['r1'].state = ReqState.RUNNING
+    reqs['r0'].n_prefilled = reqs['r1'].n_prefilled = 8
+    b = s.compose(reqs)
+    assert [p.req_id for p in b.prefill] == ['r2']
+    assert {d.req_id for d in b.decode} == {'r0', 'r1'}
+    assert b.n_slots == 3
+
+
+def test_piggyback_disabled_reproduces_seed_alternation():
+    reqs = _requests(8, 40)
+    s = _sched(reqs, SchedulerConfig(max_batch=8, chunk=16,
+                                     max_prefill_reqs=1,
+                                     piggyback_decode=False))
+    s.schedule(reqs, _admit_all)
+    reqs['r0'].state = ReqState.RUNNING
+    reqs['r0'].n_prefilled = 8
+    b = s.compose(reqs)
+    assert [p.req_id for p in b.prefill] == ['r1']
+    assert not b.decode                  # prefill XOR decode, as the seed
+    reqs['r1'].state = ReqState.RUNNING
+    reqs['r1'].n_prefilled = 40
+    b = s.compose(reqs)
+    assert not b.prefill and len(b.decode) == 2
+
+
+def test_decode_only_batch_when_nothing_to_prefill():
+    reqs = _requests(8, 8)
+    s = _sched(reqs, SchedulerConfig(max_batch=4, chunk=16))
+    s.schedule(reqs, _admit_all)
+    for r in reqs.values():
+        r.state = ReqState.RUNNING
+        r.n_prefilled = 8
+    b = s.compose(reqs)
+    assert not b.prefill
+    assert [d.req_id for d in b.decode] == ['r0', 'r1']
+
+
+def test_admission_head_of_line_blocks_fifo():
+    """A memory-blocked head request blocks the whole queue (FIFO — no
+    starvation of big requests by small late arrivals)."""
+    reqs = _requests(8, 8, 8)
+    s = _sched(reqs, SchedulerConfig(max_batch=8, chunk=16))
+
+    def admit(req):
+        return None if req.req_id == 'r1' else [1, 2]
+
+    n = s.admit(reqs, admit)
+    assert n == 1
+    assert s.running == ['r0']
+    assert s.queue == ['r1', 'r2']       # r2 NOT admitted around r1
+
+
+def test_admission_respects_max_batch():
+    reqs = _requests(*([8] * 6))
+    s = _sched(reqs, SchedulerConfig(max_batch=4, chunk=16))
+    s.admit(reqs, _admit_all)
+    assert len(s.running) == 4 and len(s.queue) == 2
+
+
+def test_fifo_fairness_under_invalidation_churn():
+    """An invalidated request requeued at the head (the Valve patch's
+    behavior) is re-admitted and re-prefilled before later arrivals."""
+    reqs = _requests(16, 16, 16, 16)
+    s = _sched(reqs, SchedulerConfig(max_batch=2, chunk=16,
+                                     max_prefill_reqs=2))
+    s.schedule(reqs, _admit_all)         # r0, r1 admitted (max_batch=2)
+    assert s.running == ['r0', 'r1']
+    for rid in ('r0', 'r1'):
+        reqs[rid].state = ReqState.RUNNING
+        reqs[rid].n_prefilled = 16
+    # invalidation hits r1: what Engine.on_pages_invalidated does
+    reqs['r1'].state = ReqState.WAITING
+    reqs['r1'].pages = []
+    reqs['r1'].n_prefilled = 0
+    s.running.remove('r1')
+    s.queue.insert(0, 'r1')
+    assert s.queue == ['r1', 'r2', 'r3']
+    b = s.schedule(reqs, _admit_all)
+    # r1 re-admitted ahead of r2/r3 and gets the prefill slot; the
+    # surviving r0 keeps decoding in the same dispatch
+    assert s.running == ['r0', 'r1']
+    assert [p.req_id for p in b.prefill] == ['r1']
+    assert [d.req_id for d in b.decode] == ['r0']
+
+
+def test_budget_defaults_to_rows_times_chunk():
+    cfg = SchedulerConfig(chunk=16, max_prefill_reqs=3)
+    assert cfg.budget == 48
+    assert SchedulerConfig(chunk=16, prefill_budget=20).budget == 20

@@ -75,3 +75,16 @@ def test_ourmem_pool_invariants_after_run():
     NodeSim(pair, Channel(), mp, CFG).run()
     mp.pool.check_invariants()
     assert mp.reclaimer.stats.ordering_violations == 0
+
+
+def test_watchdog_thresholds_come_from_config():
+    """The sim watchdogs (guard / stall / forced step) are SimConfig fields
+    so long-horizon workloads can tune them instead of tripping asserts."""
+    # a tiny guard must trip on a workload that needs more loop iterations
+    tight = SimConfig(watchdog_guard_steps=5)
+    with pytest.raises(AssertionError, match='did not terminate'):
+        run_strategy(PAIRS[0], 'Channel', 'OurMem', tight)
+    # a raised guard runs the same pair to completion
+    roomy = SimConfig(watchdog_guard_steps=100_000_000)
+    r = run_strategy(PAIRS[0], 'Channel', 'OurMem', roomy)
+    assert set(r.ttft) == {q.req_id for q in PAIRS[0].online.requests}
