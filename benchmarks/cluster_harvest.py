@@ -1,0 +1,164 @@
+"""Paper §6–7 closed loop: the Eq. 1 scheduler run on MEASURED NodeSim
+telemetry, epoch by epoch — placement, monitoring, eviction of persistent
+SLA violators, rescheduling — for Valve vs two baseline strategies.
+
+Unlike ``cluster_utilization.py`` (which scores a synthetic-telemetry fleet
+at one instant), every number here is produced by the closed loop in
+``core/cluster/harness.py``: node telemetry (busy intervals, free-memory
+traces, multi-GPU alignment) is extracted from real ``NodeSim`` runs, each
+workload's memory→throughput profile is measured by sweeping the sim, jobs'
+achieved normalized throughput is actual offline tokens over the epoch, and
+the fleet contains a non-stationary node (quiet when scouted, hot after)
+that forces the eviction/reschedule path.
+
+Strategies:
+- ``valve``          — Channel preemption + OurMem (Algorithm 1 victims)
+- ``fifo-evict``     — Channel + OurMem with FIFO victim selection
+- ``kernelpreempt``  — KernelPreempt (iteration-drain) + UVM (fault + kill)
+
+Metrics per strategy: measured utilization gain and GPUs saved (fraction of
+fleet GPU-time given to offline work, from reported achieved throughput),
+offline tokens, eviction/reschedule counts, and online TTFT/TPOT deltas vs
+each epoch slice run standalone.  Paper headline at production scale:
++34.6 % utilization, 2,170 GPUs saved on 8,054.
+
+Writes ``results/cluster_harvest.json`` and mirrors to ``BENCH_cluster.json``
+at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+from repro.core.cluster.harness import (
+    ClusterHarness, HarnessConfig, make_harness)
+from repro.core.sim.colocation import SimConfig
+
+STRATEGIES = {
+    'valve': dict(compute='Channel', memory='OurMem',
+                  eviction_policy='valve'),
+    'fifo-evict': dict(compute='Channel', memory='OurMem',
+                       eviction_policy='fifo'),
+    'kernelpreempt': dict(compute='KernelPreempt', memory='UVM',
+                          eviction_policy='valve'),
+}
+
+
+def _assert_measured_telemetry(h: ClusterHarness) -> None:
+    """Acceptance gate: every Eq. 1 input the scheduler scored came out of a
+    NodeSim run — no hand-written telemetry anywhere in the loop."""
+    for tele in h.scheduler.nodes.values():
+        assert tele.gpus, tele.name
+        for g in tele.gpus:
+            assert g.source == 'nodesim', (tele.name, g.source)
+            assert len(g.mem_trace_t) >= 2
+
+
+def run_strategy_fleet(name: str, *, n_nodes: int, gpus_per_node: int,
+                       epoch_s: float, n_epochs: int, seed: int) -> Dict:
+    cfg = HarnessConfig(n_nodes=n_nodes, gpus_per_node=gpus_per_node,
+                        epoch_s=epoch_s, n_epochs=n_epochs, seed=seed,
+                        sim=SimConfig(total_pages=1024),
+                        **STRATEGIES[name])
+    h = make_harness(cfg)
+    reports = h.run()
+    _assert_measured_telemetry(h)
+
+    total_gpus = n_nodes * gpus_per_node
+    last = reports[-1]
+    ttft = [r.ttft_delta for r in reports if r.ttft_delta is not None]
+    tpot = [r.tpot_delta for r in reports if r.tpot_delta is not None]
+    # online-only utilization: as scouted vs the final epoch's measurement
+    # (ramp nodes make these diverge — the drift the monitoring loop tracks)
+    online_util_scout = float(np.mean(
+        [1.0 - g.idle_fraction()
+         for tele in h.scout_telemetry.values() for g in tele.gpus]))
+    online_util = float(np.mean(
+        [1.0 - g.idle_fraction()
+         for tele in h.scheduler.nodes.values() for g in tele.gpus]))
+    return {
+        'strategy': name,
+        'nodes': n_nodes, 'gpus': total_gpus, 'epochs': n_epochs,
+        'jobs_submitted': len(h.jobs),
+        'jobs_placed_final': len(h.scheduler.placements),
+        'jobs_pending_final': len(h.scheduler.pending),
+        'online_utilization_scout': online_util_scout,
+        'online_utilization': online_util,
+        'utilization_gain_final': last.utilization_gain_measured,
+        'utilization_gain_mean': float(np.mean(
+            [r.utilization_gain_measured for r in reports])),
+        'gpus_saved_final': last.gpus_saved_measured,
+        'offline_tokens_total': sum(r.offline_tokens for r in reports),
+        'recompute_tokens_total': sum(r.recompute_tokens for r in reports),
+        'evictions': h.scheduler.evictions,
+        'reschedules': h.scheduler.reschedules,
+        'ttft_delta_mean': float(np.mean(ttft)) if ttft else None,
+        'tpot_delta_mean': float(np.mean(tpot)) if tpot else None,
+        'epochs_detail': [
+            {'epoch': r.epoch,
+             'utilization_gain': r.utilization_gain_measured,
+             'evictions': r.evictions_total,
+             'reschedules': r.reschedules_total,
+             'achieved': r.achieved} for r in reports],
+    }
+
+
+def run(out_path: str = 'results/cluster_harvest.json',
+        n_nodes: int = 8, gpus_per_node: int = 2, epoch_s: float = 60.0,
+        n_epochs: int = 4, seed: int = 0) -> Dict:
+    assert n_nodes >= 8 or n_epochs <= 3, \
+        'full runs use a ≥8-node fleet (small fleets are for the CI smoke)'
+    rows = {}
+    for name in STRATEGIES:
+        rows[name] = run_strategy_fleet(
+            name, n_nodes=n_nodes, gpus_per_node=gpus_per_node,
+            epoch_s=epoch_s, n_epochs=n_epochs, seed=seed)
+        r = rows[name]
+        pct = lambda v: f'{v:+.1%}' if v is not None else 'n/a'
+        print(f'{name:>14}: util gain {r["utilization_gain_final"]:+.1%} '
+              f'(mean {r["utilization_gain_mean"]:+.1%}), '
+              f'GPUs saved {r["gpus_saved_final"]:.2f}/{r["gpus"]}, '
+              f'evict {r["evictions"]} resched {r["reschedules"]}, '
+              f'recompute {r["recompute_tokens_total"]:.0f} tok, '
+              f'TTFT Δ {pct(r["ttft_delta_mean"])} '
+              f'TPOT Δ {pct(r["tpot_delta_mean"])}')
+
+    valve = rows['valve']
+    # the closed loop must exercise the monitoring plane end to end
+    assert valve['evictions'] >= 1 and valve['reschedules'] >= 1, \
+        'closed loop did not evict+reschedule an SLA violator'
+
+    result = {
+        'fleet': {'nodes': n_nodes, 'gpus_per_node': gpus_per_node,
+                  'epoch_s': epoch_s, 'epochs': n_epochs, 'seed': seed},
+        'paper_reference': {'utilization_gain': 0.346,
+                            'gpus_saved_frac': 2170 / 8054},
+        'strategies': rows,
+    }
+    os.makedirs(os.path.dirname(out_path) or '.', exist_ok=True)
+    with open(out_path, 'w') as f:
+        json.dump(result, f, indent=1)
+    with open('BENCH_cluster.json', 'w') as f:
+        json.dump(result, f, indent=1)
+    print(f'valve vs baselines (paper: +34.6% util): '
+          f'{valve["utilization_gain_final"]:+.1%} vs '
+          f'{rows["fifo-evict"]["utilization_gain_final"]:+.1%} (fifo) / '
+          f'{rows["kernelpreempt"]["utilization_gain_final"]:+.1%} '
+          f'(kernelpreempt+uvm)')
+    return result
+
+
+if __name__ == '__main__':
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--nodes', type=int, default=8)
+    ap.add_argument('--gpus-per-node', type=int, default=2)
+    ap.add_argument('--epoch-s', type=float, default=60.0)
+    ap.add_argument('--epochs', type=int, default=4)
+    ap.add_argument('--seed', type=int, default=0)
+    a = ap.parse_args()
+    run(n_nodes=a.nodes, gpus_per_node=a.gpus_per_node, epoch_s=a.epoch_s,
+        n_epochs=a.epochs, seed=a.seed)

@@ -24,6 +24,7 @@ BENCHES = [
     ('eviction_policy', 'paper Fig. 11 — Algorithm 1 vs FIFO'),
     ('colocation_matrix', 'paper Fig. 10 — 10 pairs × 6 strategies'),
     ('cluster_utilization', 'paper Fig. 8/9 — fleet utilization + savings'),
+    ('cluster_harvest', 'paper §6–7 — closed-loop NodeSim-telemetry fleet'),
     ('roofline', 'supporting analysis — dry-run roofline table'),
     ('serve_throughput', 'serving plane — batched prefill vs seed + node demo'),
 ]
@@ -52,6 +53,8 @@ def main():
                 mod.run(horizon_s=150.0)
             elif args.fast and name == 'serve_throughput':
                 mod.run(steps=100)
+            elif args.fast and name == 'cluster_harvest':
+                mod.run(n_nodes=8, epoch_s=30.0, n_epochs=4)
             else:
                 mod.run()
         except Exception:

@@ -29,6 +29,26 @@ PY
 echo "== node demo smoke (heterogeneous colocation) =="
 python -m repro.launch.serve --steps 50
 
+echo "== rate-estimator warm-up regressions (fast gate) =="
+python -m pytest -q tests/test_rate_estimators.py
+
+echo "== cluster-harness smoke (small fleet, short horizon) =="
+python - <<'PY'
+from repro.core.cluster.harness import HarnessConfig, make_harness
+from repro.core.sim.colocation import SimConfig
+
+cfg = HarnessConfig(n_nodes=3, gpus_per_node=2, epoch_s=20.0, n_epochs=2,
+                    sim=SimConfig(total_pages=1024), measure_baseline=False)
+h = make_harness(cfg)
+h.run()
+assert h.scheduler.placements, 'smoke fleet placed no offline jobs'
+assert all(g.source == 'nodesim'
+           for t in h.scheduler.nodes.values() for g in t.gpus), \
+    'scheduler consumed non-measured telemetry'
+print(f'cluster smoke OK: {len(h.scheduler.placements)} jobs placed, '
+      f'util {h.reports[-1].utilization_gain_measured:.1%}')
+PY
+
 echo "== kernel parity (fast subset, interpret mode) =="
 python -m pytest -q \
     tests/test_kernels_flash.py \

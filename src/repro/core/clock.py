@@ -6,6 +6,8 @@ import time
 
 
 class RealClock:
+    virtual = False
+
     def now(self) -> float:
         return time.monotonic()
 
@@ -14,7 +16,14 @@ class RealClock:
 
 
 class VirtualClock:
-    """Manually-advanced clock for deterministic simulation."""
+    """Manually-advanced clock for deterministic simulation.
+
+    ``virtual = True`` lets clock-domain-aware components (the gate group)
+    switch from measuring wall time to charging modeled latencies, so
+    sim-recorded timings are deterministic instead of wall-clock noise.
+    """
+
+    virtual = True
 
     def __init__(self, t0: float = 0.0):
         self._t = float(t0)

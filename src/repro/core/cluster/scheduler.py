@@ -36,6 +36,7 @@ class Placement:
     node: str
     gpu_indices: Tuple[int, ...]
     predicted: float
+    achieved: Optional[float] = None     # last reported normalized thrput
 
 
 @dataclass
@@ -53,7 +54,18 @@ class ClusterScheduler:
         self.pending: List[OfflineJob] = []
         self._busy_gpus: Dict[str, set] = {n: set() for n in self.nodes}
         self._violations: Dict[str, int] = {}
+        self._evicted_from: Dict[str, str] = {}   # job → node, one-shot avoid
+        self._awaiting_reschedule: set = set()    # evicted, not yet replaced
         self.evictions = 0
+        self.reschedules = 0
+
+    # ----------------------------------------------------------- telemetry
+    def update_node(self, tele: NodeTelemetry) -> None:
+        """Refresh (or register) one node's telemetry — the closed-loop
+        harness calls this with freshly measured traces every epoch, so
+        placement and retry decisions track what nodes actually did."""
+        self.nodes[tele.name] = tele
+        self._busy_gpus.setdefault(tele.name, set())
 
     # ------------------------------------------------------------- placing
     def _candidate_sets(self, node: NodeTelemetry, k: int
@@ -78,9 +90,15 @@ class ClusterScheduler:
             return None
         return pred
 
-    def place(self, job: OfflineJob) -> Optional[Placement]:
+    def place(self, job: OfflineJob,
+              avoid: Optional[set] = None) -> Optional[Placement]:
+        """Place on the best-scoring admissible GPU set.  ``avoid`` skips
+        named nodes (a just-evicted job must not land straight back on the
+        node it was violating on before fresh telemetry shows recovery)."""
         best: Optional[Placement] = None
         for node in self.nodes.values():
+            if avoid and node.name in avoid:
+                continue
             for gpus in self._candidate_sets(node, job.profile.n_gpus):
                 score = self._score(job, node, gpus)
                 if score is None:
@@ -88,7 +106,10 @@ class ClusterScheduler:
                 if best is None or score > best.predicted:
                     best = Placement(job, node.name, gpus, score)
         if best is None:
-            self.pending.append(job)
+            # compare by job_id: dataclass equality would compare the
+            # profile's numpy arrays and raise on ambiguous truth value
+            if all(j.job_id != job.job_id for j in self.pending):
+                self.pending.append(job)
             return None
         self._commit(best)
         return best
@@ -112,6 +133,7 @@ class ClusterScheduler:
         p = self.placements.get(job_id)
         if p is None:
             return
+        p.achieved = achieved_norm
         if achieved_norm + 1e-9 < p.job.sla:
             self._violations[job_id] = self._violations.get(job_id, 0) + 1
         else:
@@ -119,29 +141,46 @@ class ClusterScheduler:
         if self._violations[job_id] >= self.cfg.violation_patience:
             self._release(job_id)
             self.evictions += 1
+            self._evicted_from[job_id] = p.node
+            self._awaiting_reschedule.add(job_id)
             self.pending.append(p.job)
 
     def retry_pending(self) -> List[Placement]:
-        """Re-attempt pending jobs (called after telemetry refresh)."""
+        """Re-attempt pending jobs (called after telemetry refresh).
+        Evicted jobs avoid the node they violated on for this one retry."""
         todo, self.pending = self.pending, []
         placed = []
         for job in todo:
-            p = self.place(job)
+            # the avoid is consumed whether or not placement succeeds —
+            # holding it forever would starve a job whose only viable node
+            # is the (possibly recovered) one it was evicted from
+            bad_node = self._evicted_from.pop(job.job_id, None)
+            p = self.place(job, avoid={bad_node} if bad_node else None)
             if p is not None:
                 placed.append(p)
+                if job.job_id in self._awaiting_reschedule:
+                    self._awaiting_reschedule.discard(job.job_id)
+                    self.reschedules += 1
         return placed
 
     # ------------------------------------------------------------- stats
-    def utilization_gain(self) -> float:
-        """Predicted fraction of cluster GPU-time given to offline work —
-        the paper's "improved GPU utilization" metric."""
+    def _norm_thrput(self, p: Placement, measured: bool) -> float:
+        if measured and p.achieved is not None:
+            return p.achieved
+        return p.predicted
+
+    def utilization_gain(self, measured: bool = False) -> float:
+        """Fraction of cluster GPU-time given to offline work — the paper's
+        "improved GPU utilization" metric.  ``measured=True`` uses the last
+        reported achieved throughput instead of the Eq. 1 prediction (the
+        closed-loop harness reports sim-measured values)."""
         total = sum(len(n.gpus) for n in self.nodes.values())
-        gained = sum(p.predicted * p.job.profile.n_gpus
+        gained = sum(self._norm_thrput(p, measured) * p.job.profile.n_gpus
                      for p in self.placements.values())
         return gained / max(total, 1)
 
-    def gpus_saved(self) -> float:
+    def gpus_saved(self, measured: bool = False) -> float:
         """Σ offline throughput normalized by standalone — each unit is one
         GPU's worth of offline work done on harvested capacity."""
-        return sum(p.predicted * p.job.profile.n_gpus
+        return sum(self._norm_thrput(p, measured) * p.job.profile.n_gpus
                    for p in self.placements.values())

@@ -18,10 +18,11 @@ preemption stops scaling O(#GPUs).  We model both regimes:
 from __future__ import annotations
 
 import threading
-import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import List, Optional
+
+from repro.core.clock import RealClock
 
 
 @dataclass
@@ -39,27 +40,33 @@ class DeviceGate:
     dispatch-queue round trip); 0 for pure-overhead measurements.
     """
 
-    def __init__(self, device_id: int = 0, op_latency_s: float = 0.0):
+    def __init__(self, device_id: int = 0, op_latency_s: float = 0.0,
+                 clock=None):
         self.device_id = device_id
         self.op_latency_s = op_latency_s
+        self.clock = clock or RealClock()
         self._enabled = threading.Event()
         self._enabled.set()
         self.stats = GateStats()
 
     # -- control plane ----------------------------------------------------
-    def disable(self, now: Optional[float] = None) -> None:
-        if self.op_latency_s:
-            time.sleep(self.op_latency_s)
+    # ``charge_latency=False`` lets a group-level flip charge the modeled
+    # op latency once for the whole fan-out instead of per device.
+    def disable(self, now: Optional[float] = None, *,
+                charge_latency: bool = True) -> None:
+        if self.op_latency_s and charge_latency:
+            self.clock.sleep(self.op_latency_s)
         self._enabled.clear()
         self.stats.disables += 1
-        self.stats.last_disable_t = time.monotonic() if now is None else now
+        self.stats.last_disable_t = self.clock.now() if now is None else now
 
-    def enable(self, now: Optional[float] = None) -> None:
-        if self.op_latency_s:
-            time.sleep(self.op_latency_s)
+    def enable(self, now: Optional[float] = None, *,
+               charge_latency: bool = True) -> None:
+        if self.op_latency_s and charge_latency:
+            self.clock.sleep(self.op_latency_s)
         self._enabled.set()
         self.stats.enables += 1
-        self.stats.last_enable_t = time.monotonic() if now is None else now
+        self.stats.last_enable_t = self.clock.now() if now is None else now
 
     # -- data plane (called by the offline engine between chunks) ---------
     @property
@@ -79,26 +86,41 @@ class GateGroup:
     (the paper's 1-line driver change).
     """
 
-    def __init__(self, gates: List[DeviceGate], mode: str = 'fanout'):
+    def __init__(self, gates: List[DeviceGate], mode: str = 'fanout',
+                 clock=None):
         assert mode in ('serial', 'fanout'), mode
         self.gates = gates
         self.mode = mode
+        self.clock = clock or RealClock()
         self._node_lock = threading.Lock()
+        # a virtual clock charges modeled latencies synchronously — real
+        # threads would race on the shared clock and record sums, not maxes
         self._pool = (ThreadPoolExecutor(max_workers=max(len(gates), 1))
-                      if mode == 'fanout' else None)
+                      if mode == 'fanout' and not self.clock.virtual
+                      else None)
 
     def _apply(self, fn_name: str) -> float:
         """Flip all gates; returns elapsed seconds (the preemption latency)."""
-        t0 = time.monotonic()
+        t0 = self.clock.now()
         if self.mode == 'serial':
+            # un-patched driver: node lock serializes → Σ op latencies
+            # (each gate charges its latency on the shared clock, so this
+            # branch is correct under both real and virtual clocks)
             with self._node_lock:
                 for g in self.gates:
                     getattr(g, fn_name)()
+        elif self.clock.virtual:
+            # patched driver under a virtual clock: concurrent flips →
+            # max op latency, charged once for the group
+            self.clock.sleep(max((g.op_latency_s for g in self.gates),
+                                 default=0.0))
+            for g in self.gates:
+                getattr(g, fn_name)(charge_latency=False)
         else:
             futs = [self._pool.submit(getattr(g, fn_name)) for g in self.gates]
             for f in futs:
                 f.result()
-        return time.monotonic() - t0
+        return self.clock.now() - t0
 
     def disable_all(self) -> float:
         return self._apply('disable')

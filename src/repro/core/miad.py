@@ -55,21 +55,39 @@ class MIADReservation:
         self.h = max(h_init, self.cfg.h_min)
         self.t = self.cfg.t_init
         self._events: Deque[float] = deque()
+        self._t_observe_start: Optional[float] = None
         self._last_release = -1e30
         self._last_t_update = -1e30
         self.stats = MIADStats()
 
     # ------------------------------------------------------------------
     def _event_rate(self, now: float) -> float:
+        """Events per second over the *elapsed* horizon.
+
+        During warm-up (first ``rate_window`` seconds of observation) the
+        denominator is the time actually observed, not the full window —
+        dividing by the window would underestimate the rate exactly when a
+        burst starts, and T would fail to increase multiplicatively until a
+        whole window had passed.
+        """
         w = self.cfg.rate_window
         while self._events and self._events[0] < now - w:
             self._events.popleft()
-        horizon = min(w, max(now - (self._events[0] if self._events else now), 1e-9))
-        return len(self._events) / w
+        if len(self._events) < 2:
+            # a single event over a near-zero elapsed horizon is
+            # rate-indeterminate, not a burst — fall back to the full
+            # window rather than reading one reclamation as 1000/s
+            return len(self._events) / w
+        start = self._t_observe_start if self._t_observe_start is not None \
+            else self._events[0]
+        horizon = min(w, max(now - start, 1e-3))
+        return len(self._events) / horizon
 
     def note_reclamation(self, now: float) -> None:
         """An actual reclamation fired — the interference event whose rate
         the T controller drives toward the user target."""
+        if self._t_observe_start is None:
+            self._t_observe_start = now
         self._events.append(now)
 
     def on_tick(self, now: float, online_used: int) -> int:
@@ -78,6 +96,8 @@ class MIADReservation:
         ``online_used``: handles currently consumed by online KV cache.
         """
         c = self.cfg
+        if self._t_observe_start is None:
+            self._t_observe_start = now
         pressured = online_used >= c.pressure_util * self.h
         if pressured:
             # multiplicative increase: pre-map more handles ahead of demand

@@ -46,8 +46,11 @@ class ReclamationRateLimiter:
     def __init__(self, window_s: float = 60.0):
         self.window_s = window_s
         self._events: Deque[float] = deque()
+        self._t0: Optional[float] = None     # first observation time
 
     def note(self, now: float) -> None:
+        if self._t0 is None:
+            self._t0 = now
         self._events.append(now)
         self._trim(now)
 
@@ -57,8 +60,18 @@ class ReclamationRateLimiter:
             self._events.popleft()
 
     def rate(self, now: float) -> float:
+        """Events per second over the *elapsed* horizon: before a full
+        window has been observed, divide by the time actually observed —
+        dividing by ``window_s`` would underestimate warm-up bursts (same
+        bug class as ``MIADReservation._event_rate``)."""
         self._trim(now)
-        return len(self._events) / self.window_s
+        if len(self._events) < 2:
+            # one event over ~zero elapsed time is rate-indeterminate —
+            # use the full window (see MIADReservation._event_rate)
+            return len(self._events) / self.window_s
+        start = self._t0 if self._t0 is not None else self._events[0]
+        horizon = min(self.window_s, max(now - start, 1e-3))
+        return len(self._events) / horizon
 
 
 class ReclamationController:

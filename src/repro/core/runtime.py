@@ -61,10 +61,12 @@ class ValveRuntime:
         # back to the legacy single ``on_invalidate`` callback (if any).
         self._invalidation_route: Dict[str, InvalidationCallback] = {}
         self._invalidation_fallback = on_invalidate
+        # gates share the runtime clock so sim runs record modeled (and
+        # deterministic) flip latencies, not wall-clock noise
         self.gates = GateGroup(
-            [DeviceGate(i, self.cfg.gate_op_latency_s)
+            [DeviceGate(i, self.cfg.gate_op_latency_s, clock=self.clock)
              for i in range(self.cfg.n_devices)],
-            mode=self.cfg.gate_mode)
+            mode=self.cfg.gate_mode, clock=self.clock)
         self.lifecycle = OnlineLifecycleTracker(
             t_cool_init=self.cfg.t_cool_init)
         import dataclasses
@@ -177,7 +179,15 @@ class ValveRuntime:
             return inv
         finally:
             if was_open and self.lifecycle.may_wake_offline(now):
-                self.gates.enable_all()
+                self._wake_offline()
+
+    def _wake_offline(self) -> None:
+        """Re-enable offline compute — the ONLY path that opens the gates,
+        so ``stats.offline_wakeups`` always agrees with gate enable counts
+        (both the tick path and the reclaim finally-branch go through it)."""
+        self.gates.enable_all()
+        self.stats.offline_wakeups += 1
+        self.lifecycle.stats.wakeups += 1
 
     # ------------------------------------------------------------------
     # Periodic tick: MIAD reservation + offline wake-up
@@ -187,9 +197,7 @@ class ValveRuntime:
         h_target = self.miad.on_tick(now, self.pool.online_used_handles())
         self._apply_reservation(h_target, now)
         if self.gates.all_disabled and self.lifecycle.may_wake_offline(now):
-            self.gates.enable_all()
-            self.stats.offline_wakeups += 1
-            self.lifecycle.stats.wakeups += 1
+            self._wake_offline()
 
     def _apply_reservation(self, h_target: int, now: float) -> None:
         """Grow/shrink the pool's reserved-handle set toward MIAD's H."""
@@ -221,6 +229,12 @@ class ValveRuntime:
     def check_invariants(self) -> None:
         self.pool.check_invariants()
         assert self.reclaimer.stats.ordering_violations == 0
+        # wake-up accounting is unified: every gate enable is one counted
+        # offline wake-up (gates start enabled without an enable() call)
+        for g in self.gates.gates:
+            assert g.stats.enables == self.stats.offline_wakeups, \
+                (g.device_id, g.stats.enables, self.stats.offline_wakeups)
+        assert self.stats.offline_wakeups == self.lifecycle.stats.wakeups
         # at-most-one compute preemption per online request (paper §4.2)
         for req, n in self.lifecycle.stats.preempted_requests.items():
             assert n <= 1, f'request {req} preempted {n}× (> 1)'

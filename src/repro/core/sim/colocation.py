@@ -21,6 +21,7 @@ request and forfeit its generated tokens.
 from __future__ import annotations
 
 import itertools
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -82,10 +83,26 @@ class SimResult:
     compute_stats: object = None
     mem_stats: object = None
     max_preempt_per_request: int = 0
+    # -- measured node telemetry (feeds the §6 cluster perf model) --
+    # online-busy GPU spans (decode gaps coalesced) and the trace of memory
+    # NOT held by online — exactly the inputs Eq. 1's P_compute / P_memory /
+    # P_multi consume, so the cluster scheduler can run on simulated-measured
+    # data instead of hand-written telemetry
+    busy_intervals: List[Tuple[float, float]] = field(default_factory=list)
+    mem_trace_t: List[float] = field(default_factory=list)
+    mem_trace_free: List[float] = field(default_factory=list)
+    # requests whose KV need exceeds the whole pool — rejected at admission
+    # (the real engine returns a max-context error; admitting head-of-line
+    # would block the queue forever)
+    rejected: List[str] = field(default_factory=list)
 
     @property
     def offline_throughput(self) -> float:
         return self.offline_tokens / max(self.horizon, 1e-9)
+
+    def online_busy_fraction(self) -> float:
+        busy = sum(b - a for a, b in self.busy_intervals)
+        return busy / max(self.horizon, 1e-9)
 
 
 class NodeSim:
@@ -249,10 +266,41 @@ class NodeSim:
                 done_frac = max(0.0, (online_t - t0)
                                 / max(self.off_busy_until - t0, 1e-12))
                 r = targets[0]
-                r.prefill_tokens = int(r.prefill_tokens * (1 - done_frac))
+                # round UP and clamp to ≥1: the dispatch did NOT complete
+                # (we are strictly before off_busy_until), so truncating a
+                # nearly-finished prefill to 0 remaining tokens would credit
+                # offline with free work on resume
+                remaining = r.prefill_tokens * (1.0 - done_frac)
+                r.prefill_tokens = max(1, int(math.ceil(remaining - 1e-9)))
             # decode iteration: tokens not produced; requests stay running
             self.off_busy_until = online_t + delay
         return online_t + delay
+
+    # ------------------------------------------------------------------
+    # Measured telemetry (the cluster plane's view of this node)
+    # ------------------------------------------------------------------
+    def _note_busy(self, a: float, b: float) -> None:
+        """Record an online-busy span; spans separated by ≤ 2 decode gaps
+        coalesce (the inter-iteration gap is not harvestable idle — that is
+        the whole point of T_cool)."""
+        if b <= a:
+            return
+        iv = self.result.busy_intervals
+        if iv and a <= iv[-1][1] + 2.0 * self.cfg.t_decode_gap + 1e-9:
+            iv[-1] = (iv[-1][0], max(iv[-1][1], b))
+        else:
+            iv.append((a, b))
+
+    def _sample_mem(self, now: float) -> None:
+        """Sample pages NOT held by online — the memory a colocated offline
+        job could occupy at this instant (Eq. 2's free-memory trace)."""
+        free_for_offline = self.mp.total - sum(self.mp.online_pages.values())
+        tr_t = self.result.mem_trace_t
+        if tr_t and now <= tr_t[-1] + 1e-12:
+            self.result.mem_trace_free[-1] = free_for_offline
+            return
+        tr_t.append(now)
+        self.result.mem_trace_free.append(float(free_for_offline))
 
     # ------------------------------------------------------------------
     # Online engine
@@ -275,6 +323,13 @@ class NodeSim:
     def _admit_online(self) -> None:
         while self.waiting and len(self.active) < self.cfg.online_max_batch:
             st = self.waiting[0]
+            if self._pages_for(st.req) > self.mp.total:
+                # oversized: no admission order can ever satisfy it — reject
+                # like the real engine's max-context error instead of
+                # livelocking the head of the queue
+                self.waiting.pop(0)
+                self.result.rejected.append(st.req.req_id)
+                continue
             res = self.mp.alloc_online(st.req.req_id,
                                        self._pages_for(st.req), self.now)
             self._off_invalidate(res)
@@ -316,6 +371,7 @@ class NodeSim:
             st.prefilled = True
             st.tokens_done = 1              # prefill emits the first token
             st.t_first = st.t_last = self.now
+            self._note_busy(start, self.now)
             if self.cp:
                 self.cp.on_online_iter(start, self.now)
             if st.req.output_tokens <= 1:
@@ -323,6 +379,7 @@ class NodeSim:
             return True
         # decode iteration over the whole batch
         self.now += self.cfg.t_decode_iter
+        self._note_busy(start, self.now)
         if self.cp:
             self.cp.on_online_iter(start, self.now)
         for st in list(decoding):
@@ -363,6 +420,7 @@ class NodeSim:
             if self.now - self._last_tick >= self.cfg.miad_tick:
                 self._last_tick = self.now
                 self.mp.tick(self.now)
+                self._sample_mem(self.now)
             ran = self._online_dispatch()
             if ran:
                 continue
@@ -385,11 +443,16 @@ class NodeSim:
                     self.now = max(self.now, t_next)
                     continue
             if self.off_inflight is not None:
-                # monotonic: a dispatch that ended in the past must not
-                # rewind the clock (it completes on the next loop entry)
-                self.now = max(self.now,
-                               min(self.off_busy_until,
-                                   max(next_arr, self.now)))
+                # wait for the dispatch to end — or for the next arrival if
+                # it comes first.  An arrival already in the past must not
+                # clamp the jump to ``now`` (that stalls the clock below
+                # off_busy_until forever when online is memory-blocked),
+                # and a dispatch that ended in the past must not rewind the
+                # clock (it completes on the next loop entry).
+                t_next = self.off_busy_until
+                if next_arr > self.now:
+                    t_next = min(t_next, next_arr)
+                self.now = max(self.now, t_next)
                 continue
             # truly idle: jump to next arrival or wake-check boundary
             t_jump = next_arr
@@ -404,6 +467,11 @@ class NodeSim:
                 break
 
         self.result.horizon = max(self.now, horizon)
+        self._sample_mem(self.result.horizon)
+        if not self.result.mem_trace_t or self.result.mem_trace_t[0] > 0.0:
+            # anchor the trace at t=0 (full memory before any admission)
+            self.result.mem_trace_t.insert(0, 0.0)
+            self.result.mem_trace_free.insert(0, float(self.mp.total))
         self.result.compute_stats = self.cp.stats if self.cp else None
         self.result.mem_stats = self.mp.stats
         if self.cp:

@@ -1,11 +1,20 @@
-"""Cluster performance model (Eq. 1–2) and scheduler (§6)."""
+"""Cluster performance model (Eq. 1–2), scheduler (§6), and the closed-loop
+NodeSim-telemetry harness."""
 import numpy as np
 import pytest
 
+from repro.core.cluster.harness import (
+    HarnessConfig, make_harness, profile_workload_from_sim,
+    telemetry_from_sim)
 from repro.core.cluster.perfmodel import (
     GPUTelemetry, NodeTelemetry, admissible, p_compute, p_memory, p_multi,
-    predict_normalized_throughput, profile_workload)
+    predict_normalized_throughput, profile_workload,
+    profile_workload_from_curve)
 from repro.core.cluster.scheduler import ClusterScheduler, OfflineJob
+from repro.core.sim.colocation import SimConfig, run_online_standalone
+from repro.core.sim.workload import (
+    OfflineWorkload, WorkloadPair, make_fleet_workloads, make_online_trace,
+    slice_trace)
 
 
 def _gpu(busy, free_frac=0.8, horizon=100.0):
@@ -84,6 +93,121 @@ def test_scheduler_queues_unplaceable_jobs():
                      sla=0.9)
     assert sched.place(job) is None
     assert job in sched.pending
+
+
+def test_profile_from_measured_curve_knee_and_monotone():
+    mems = [100, 200, 400, 800, 1600]
+    thrs = [50, 120, 190, 200, 198]      # tiny inversion at the tail
+    w = profile_workload_from_curve('w', mems, thrs, sat_frac=0.95)
+    assert w.thrput_max == pytest.approx(200.0)
+    assert w.m_req == 400.0              # first point ≥ 0.95 × peak
+    assert w.mac > 0
+    assert np.all(np.diff(w.thrput_points) >= 0)   # inversion clamped
+
+
+def test_scheduler_update_node_and_eviction_avoids_old_node():
+    sched = ClusterScheduler([NodeTelemetry('a', [_gpu([])])])
+    job = OfflineJob(profile_workload('j', thrput_max=10.0, m_req=1024),
+                     sla=0.3)
+    assert sched.place(job, avoid={'a'}) is None    # only node avoided
+    [p] = sched.retry_pending()                     # one-shot: retries may use it
+    assert p.node == 'a'
+    # evict via persistent violation; FIRST retry avoids the violated node
+    for _ in range(sched.cfg.violation_patience):
+        sched.report_throughput(job.job_id, 0.0)
+    assert sched.evictions == 1
+    assert sched.retry_pending() == []              # only 'a' exists → avoided
+    # the avoid is one-shot: a recovered old node must not starve the job
+    sched.update_node(NodeTelemetry('b', [_gpu([])]))  # refresh adds a node
+    [p2] = sched.retry_pending()
+    assert p2.node in ('a', 'b')
+    assert sched.reschedules == 1
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop harness: NodeSim-measured telemetry through the §6 scheduler
+# ---------------------------------------------------------------------------
+
+_SIM = SimConfig(total_pages=1024)
+
+
+def test_telemetry_from_sim_is_measured_and_sane():
+    trace = make_online_trace(name='t', horizon_s=30.0, base_rate=0.3,
+                              burst_rate=3.0, prompt_mean=512, seed=3)
+    res = run_online_standalone(
+        WorkloadPair('t', trace, OfflineWorkload('idle')), _SIM)
+    g = telemetry_from_sim(res, window=30.0)
+    assert g.source == 'nodesim'
+    assert g.busy_intervals, 'online activity must produce busy intervals'
+    assert all(0.0 <= a < b for a, b in g.busy_intervals)
+    assert 0.0 < p_compute(g) < 1.0
+    assert len(g.mem_trace_t) == len(g.mem_trace_free) >= 2
+    assert np.all(g.mem_trace_free <= _SIM.total_pages)
+    assert np.all(np.diff(g.mem_trace_t) > 0)
+    # memory dips below full while requests hold KV
+    assert g.mem_trace_free.min() < _SIM.total_pages
+
+
+def test_profile_workload_from_sim_saturating_curve():
+    off = OfflineWorkload('prof', prompt_tokens=256, output_tokens=128,
+                          max_batch=32)
+    w = profile_workload_from_sim(off, _SIM, horizon_s=8.0,
+                                  fractions=(0.1, 0.3, 0.6, 1.0))
+    assert w.thrput_max > 0
+    assert np.all(np.diff(w.thrput_points) >= 0)
+    assert w.mem_points[0] < w.m_req <= w.mem_points[-1]
+    # more memory → more throughput at the low end (memory-bound regime)
+    assert w.thrput_points[0] < w.thrput_points[-1]
+
+
+def test_fleet_workloads_alignment_structure():
+    fleet = make_fleet_workloads(4, 2, horizon_s=60.0, seed=1,
+                                 n_ramp_nodes=1, ramp_at_s=20.0)
+    assert len(fleet) == 4 and all(len(n.gpu_traces) == 2 for n in fleet)
+    # ramp node heats up after ramp_at_s
+    ramp = fleet[0].gpu_traces[0]
+    early = sum(1 for r in ramp.requests if r.t_arrive < 20.0)
+    late = sum(1 for r in ramp.requests if r.t_arrive >= 20.0)
+    assert late > 3 * max(early, 1)
+    # slicing rebases to epoch-local time
+    sl = slice_trace(ramp, 20.0, 40.0)
+    assert sl.horizon_s == pytest.approx(20.0)
+    assert all(0.0 <= r.t_arrive < 20.0 for r in sl.requests)
+
+
+def test_closed_loop_places_from_measured_telemetry():
+    cfg = HarnessConfig(n_nodes=3, gpus_per_node=1, epoch_s=30.0,
+                        n_epochs=1, sim=_SIM, n_ramp_nodes=0,
+                        measure_baseline=False, seed=2)
+    h = make_harness(cfg, n_jobs=2)
+    h.run()
+    assert h.scheduler.placements, 'no job placed'
+    for tele in h.scheduler.nodes.values():
+        assert all(g.source == 'nodesim' for g in tele.gpus)
+    for p in h.scheduler.placements.values():
+        assert p.achieved is not None          # monitoring loop reported
+        assert p.achieved > 0.0
+
+
+def test_closed_loop_evicts_and_reschedules_sla_violator():
+    """The §6 monitoring plane end to end: a node that was quiet when
+    scouted heats up, its jobs' MEASURED achieved throughput falls below
+    SLA for violation_patience epochs, they are evicted and successfully
+    rescheduled onto healthy nodes where they recover."""
+    cfg = HarnessConfig(n_nodes=4, gpus_per_node=2, epoch_s=40.0,
+                        n_epochs=4, sim=_SIM, measure_baseline=False,
+                        seed=0)
+    h = make_harness(cfg)
+    ramp_node = h.fleet[0].name
+    h.run()
+    assert h.scheduler.evictions >= 1
+    assert h.scheduler.reschedules >= 1
+    # rescheduled jobs ended up off the ramp node and SLA-compliant
+    final = h.reports[-1]
+    moved = [p for p in h.scheduler.placements.values()
+             if p.node != ramp_node and p.job.job_id in final.achieved]
+    assert moved
+    assert any(final.achieved[p.job.job_id] >= p.job.sla for p in moved)
 
 
 def test_scheduler_no_double_booking():

@@ -1,0 +1,91 @@
+"""Warm-up regression tests for the two sliding-window rate estimators.
+
+Pre-fix, both ``MIADReservation._event_rate`` and
+``ReclamationRateLimiter.rate`` divided the event count by the *full*
+window even when the estimator had observed far less time, so a burst
+inside the first window read as a low rate: T failed to increase
+multiplicatively exactly when bursts start (the moment the §5 controller
+exists for), and the monitoring-plane rate underreported.  Both now divide
+by the elapsed observation horizon, capped at the window.
+"""
+import pytest
+
+from repro.core.miad import MIADConfig, MIADReservation
+from repro.core.reclamation import ReclamationRateLimiter
+
+
+def _burst_rate_estimate(window_s: float):
+    """Drive both estimators with the same warm-up burst: 6 events in the
+    first 5 s of a much longer window.  True rate ≈ 1.2/s."""
+    cfg = MIADConfig(rate_window=window_s)
+    miad = MIADReservation(h_init=4, cfg=cfg)
+    limiter = ReclamationRateLimiter(window_s=window_s)
+    t = 0.0
+    for _ in range(6):
+        t += 5.0 / 6.0
+        miad.note_reclamation(t)
+        limiter.note(t)
+    return miad._event_rate(t), limiter.rate(t), t
+
+
+@pytest.mark.parametrize('window_s', [60.0, 120.0])
+def test_warmup_burst_rate_uses_elapsed_horizon(window_s):
+    miad_rate, limiter_rate, t = _burst_rate_estimate(window_s)
+    true_rate = 6.0 / (t - 5.0 / 6.0)   # observation starts at first event
+    # pre-fix both estimators returned 6/window (0.05–0.1/s) — an
+    # underestimate by the window/elapsed ratio
+    assert miad_rate == pytest.approx(true_rate, rel=0.01)
+    assert limiter_rate == pytest.approx(true_rate, rel=0.01)
+    assert miad_rate > 6.0 / window_s * 5      # far above the buggy value
+
+
+def test_warmup_burst_drives_t_up_multiplicatively():
+    """A burst inside the first ``rate_window`` must push T up by the
+    multiplicative factor ``t_beta``.  Pre-fix the measured rate stayed
+    below ``target_rate`` (6/120 = 0.05 < 0.1) and T *decreased*
+    additively from ``t_init`` — the regression this test pins."""
+    cfg = MIADConfig()          # target 0.1/s, window 120 s, t_init 1.0
+    m = MIADReservation(h_init=4, cfg=cfg)
+    t = 0.0
+    for _ in range(6):          # 6 reclamations in 5 s ≈ 1.2/s >> target
+        t += 5.0 / 6.0
+        m.note_reclamation(t)
+        m.on_tick(t, online_used=0)
+    assert m.t >= cfg.t_init * cfg.t_beta, \
+        f'T must grow multiplicatively during a warm-up burst, got {m.t}'
+
+
+def test_single_event_is_not_a_burst():
+    """One reclamation over a near-zero elapsed horizon must NOT read as an
+    enormous rate (the naive elapsed-horizon division would say 1000/s and
+    multiplicatively ratchet T off a single event)."""
+    m = MIADReservation(h_init=4, cfg=MIADConfig())   # window 120, target 0.1
+    m.note_reclamation(5.0)
+    assert m._event_rate(5.0005) == pytest.approx(1.0 / 120.0)
+    m.on_tick(5.0005, online_used=0)
+    assert m.t <= MIADConfig().t_init                 # no multiplicative jump
+    limiter = ReclamationRateLimiter(window_s=60.0)
+    limiter.note(5.0)
+    assert limiter.rate(5.0005) == pytest.approx(1.0 / 60.0)
+
+
+def test_rate_decays_after_burst_leaves_window():
+    cfg = MIADConfig(rate_window=30.0)
+    m = MIADReservation(h_init=4, cfg=cfg)
+    limiter = ReclamationRateLimiter(window_s=30.0)
+    for i in range(5):
+        m.note_reclamation(float(i))
+        limiter.note(float(i))
+    assert m._event_rate(40.0) == 0.0
+    assert limiter.rate(40.0) == 0.0
+
+
+def test_steady_state_rate_unchanged_by_fix():
+    """After a full window of observation the estimate is count/window —
+    the fix only changes warm-up behavior."""
+    limiter = ReclamationRateLimiter(window_s=10.0)
+    t = 0.0
+    for _ in range(100):        # 1 event/s for 100 s
+        t += 1.0
+        limiter.note(t)
+    assert limiter.rate(t) == pytest.approx(1.0, rel=0.11)

@@ -2,11 +2,12 @@
 import numpy as np
 import pytest
 
-from repro.core.sim.colocation import (NodeSim, SimConfig,
+from repro.core.sim.colocation import (NodeSim, OfflineReq, SimConfig,
                                        run_offline_standalone,
                                        run_online_standalone, run_strategy)
 from repro.core.sim.strategies import Channel, OurMem, Prism
-from repro.core.sim.workload import make_workload_pairs
+from repro.core.sim.workload import (OfflineWorkload, OnlineWorkload,
+                                     WorkloadPair, make_workload_pairs)
 
 CFG = SimConfig()
 PAIRS = make_workload_pairs(4, horizon_s=120.0)
@@ -75,6 +76,69 @@ def test_ourmem_pool_invariants_after_run():
     NodeSim(pair, Channel(), mp, CFG).run()
     mp.pool.check_invariants()
     assert mp.reclaimer.stats.ordering_violations == 0
+
+
+def _bare_sim(cfg=None):
+    cfg = cfg or CFG
+    pair = WorkloadPair('bare', OnlineWorkload('empty', [], 10.0),
+                        OfflineWorkload('off'))
+    return NodeSim(pair, Channel(), Prism(cfg.total_pages, cfg.page_tokens),
+                   cfg)
+
+
+def test_off_preempt_context_save_rounds_up():
+    """A context-saved prefill that is 99.9% done must keep ≥1 token of
+    remaining work — the dispatch did NOT complete.  Regression: int()
+    truncation credited offline with a free prefill on resume."""
+    sim = _bare_sim()
+    r = OfflineReq('off-0', prefill_tokens=1000, out_remaining=10, pages=4)
+    sim.off_pending.append(r)
+    dur = 1000 * sim.cfg.t_prefill_per_token
+    sim.off_inflight = ('prefill', 0.0, [r])
+    sim.off_busy_until = dur
+    sim._off_preempt(0.9995 * dur)          # preempt just before completion
+    assert r.prefill_tokens >= 1            # pre-fix: int(1000*0.0005) == 0
+
+
+def test_off_preempt_halfway_rounds_up_not_down():
+    sim = _bare_sim()
+    r = OfflineReq('off-0', prefill_tokens=101, out_remaining=10, pages=4)
+    sim.off_pending.append(r)
+    dur = 101 * sim.cfg.t_prefill_per_token
+    sim.off_inflight = ('prefill', 0.0, [r])
+    sim.off_busy_until = dur
+    sim._off_preempt(0.5 * dur)             # 50.5 tokens remain
+    assert r.prefill_tokens == 51           # ceil, not trunc
+
+
+def test_sim_records_busy_intervals_and_mem_trace():
+    pair = PAIRS[0]
+    r = run_strategy(pair, 'Channel', 'OurMem', CFG)
+    assert r.busy_intervals
+    assert all(b > a >= 0.0 for a, b in r.busy_intervals)
+    # intervals are disjoint and sorted (coalescing keeps them canonical)
+    for (a1, b1), (a2, b2) in zip(r.busy_intervals, r.busy_intervals[1:]):
+        assert a2 > b1
+    assert 0.0 < r.online_busy_fraction() < 1.0
+    assert len(r.mem_trace_t) == len(r.mem_trace_free) >= 2
+    assert all(t1 > t0 for t0, t1 in zip(r.mem_trace_t, r.mem_trace_t[1:]))
+    assert max(r.mem_trace_free) <= CFG.total_pages
+
+
+def test_oversized_online_request_rejected_not_livelocked():
+    """A request whose KV need exceeds the whole pool can never be
+    admitted; it must be rejected (max-context error) — pre-fix it blocked
+    the head of the queue and the sim spun to the watchdog guard."""
+    from repro.core.sim.workload import OnlineRequest
+    cfg = SimConfig(total_pages=64)                  # 1024-token pool
+    reqs = [OnlineRequest('huge', 0.5, 4096, 8),     # > pool, impossible
+            OnlineRequest('ok', 1.0, 256, 8)]
+    pair = WorkloadPair('rej', OnlineWorkload('on', reqs, 5.0),
+                        OfflineWorkload('off'))
+    r = NodeSim(pair, Channel(), Prism(cfg.total_pages, cfg.page_tokens),
+                cfg).run()
+    assert r.rejected == ['huge']
+    assert 'ok' in r.ttft                            # queue kept moving
 
 
 def test_watchdog_thresholds_come_from_config():
