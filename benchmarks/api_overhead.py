@@ -1,0 +1,183 @@
+"""Control-plane hot-path overhead — the cost of API v1's indirection.
+
+The session layer and the typed event stream sit on the serving hot path
+(admission, iteration notifications, preemption/reclamation), so the
+redesign carries a perf contract:
+
+1. **micro**: per-call cost of session alloc/free, the admit/finish
+   bundles, and iteration notifications vs the pre-API direct calls
+   (raw pool / direct runtime methods), plus the cost of one event
+   publish through the bus with the telemetry registry subscribed;
+2. **macro**: ``NodeSim`` smoke wall time with the event bus on vs off
+   (``events=False`` is the pre-API baseline) — the bus must add
+   **< 10 %** aggregate (hard gate; ``run()`` raises otherwise).  The
+   smoke is the first three production-shaped workload pairs (memory- and
+   compute-bursty mix) at the cluster harness's default pool size, so the
+   gate measures the fleet-scale configuration, not one pathological
+   pressure loop.
+
+Writes ``results/api_overhead.json`` and mirrors it to ``BENCH_api.json``
+at the repo root (the perf-trajectory record).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+from repro.core.clock import VirtualClock
+from repro.core.events import EventBus, PreemptionEvent
+from repro.core.runtime import RuntimeConfig, ValveRuntime
+from repro.core.sim.colocation import NodeSim, SimConfig
+from repro.core.sim.strategies import Channel, OurMem
+from repro.core.sim.workload import make_workload_pairs
+from repro.core.telemetry import TelemetryRegistry
+from repro.serving.kvpool import KVPool
+
+MACRO_GATE = 0.10                    # event bus may add <10% to NodeSim
+
+
+def _time_per_call(fn, n: int, repeats: int = 5) -> float:
+    """Best-of-``repeats`` seconds per call of ``fn`` over ``n`` iters."""
+    best = float('inf')
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fn()
+        best = min(best, time.perf_counter() - t0)
+    return best / n
+
+
+def micro() -> Dict[str, float]:
+    n = 20_000
+
+    # -- alloc/free: raw pool vs session vs legacy shim ------------------
+    pool = KVPool(n_handles=8, pages_per_handle=8, reserved_handles=1)
+
+    def pool_alloc_free():
+        pool.alloc('r', 2, klass='offline')
+        pool.free('r')
+
+    rt = ValveRuntime(KVPool(8, 8, reserved_handles=1),
+                      RuntimeConfig(), clock=VirtualClock())
+    sess = rt.open_session('offline', name='bench')
+
+    def session_alloc_free():
+        sess.alloc('r', 2)
+        sess.free('r')
+
+    def legacy_alloc_free():
+        rt.alloc_offline('r', 2)
+        rt.free_offline('r')
+
+    on = rt.open_session('online', name='bench-on')
+
+    def session_admit_finish():
+        on.admit('q', 1)
+        on.finish('q')
+
+    # -- iteration notifications: direct runtime vs session --------------
+    def direct_notify():
+        rt.on_online_iteration_start()
+        rt.on_online_iteration_end()
+
+    def session_notify():
+        on.iteration_start()
+        on.iteration_end()
+
+    # -- event dispatch: one publish through bus + registry --------------
+    bus = EventBus(VirtualClock())
+    TelemetryRegistry(bus)
+
+    def publish_event():
+        bus.publish(PreemptionEvent, latency_s=1e-3, requests=('r',))
+
+    out = {
+        'pool_alloc_free_us': _time_per_call(pool_alloc_free, n) * 1e6,
+        'session_alloc_free_us': _time_per_call(session_alloc_free, n) * 1e6,
+        'legacy_shim_alloc_free_us': _time_per_call(legacy_alloc_free, n) * 1e6,
+        'session_admit_finish_us': _time_per_call(session_admit_finish, n) * 1e6,
+        'direct_notify_us': _time_per_call(direct_notify, n) * 1e6,
+        'session_notify_us': _time_per_call(session_notify, n) * 1e6,
+        'event_publish_us': _time_per_call(publish_event, n) * 1e6,
+    }
+    out['session_alloc_overhead_x'] = (out['session_alloc_free_us']
+                                       / out['pool_alloc_free_us'])
+    out['session_notify_overhead_x'] = (out['session_notify_us']
+                                        / out['direct_notify_us'])
+    return out
+
+
+def macro(horizon_s: float = 120.0, repeats: int = 3,
+          n_pairs: int = 3) -> Dict[str, object]:
+    """NodeSim smoke (Valve strategy) with the event bus on vs off —
+    aggregate wall time over the first ``n_pairs`` workload pairs at the
+    cluster harness's default pool size (1024 pages)."""
+    pairs = make_workload_pairs(n_pairs, horizon_s=horizon_s, seed=3)
+    cfg = SimConfig(total_pages=1024)
+
+    def run_once(pair, events: bool):
+        sim = NodeSim(pair, Channel(), OurMem(cfg.total_pages,
+                                              cfg.page_tokens),
+                      cfg, events=events)
+        t0 = time.perf_counter()
+        res = sim.run()
+        return time.perf_counter() - t0, res
+
+    per_pair = []
+    base_total = on_total = 0.0
+    n_events = 0
+    for pair in pairs:
+        run_once(pair, True)             # warm allocator/caches per pair
+        t_off = min(run_once(pair, False)[0] for _ in range(repeats))
+        t_on, res = float('inf'), None
+        for _ in range(repeats):
+            t1, r = run_once(pair, True)
+            if t1 < t_on:
+                t_on, res = t1, r
+        base_total += t_off
+        on_total += t_on
+        n_events += len(res.events)
+        per_pair.append({'pair': pair.name, 'wall_s_off': t_off,
+                         'wall_s_on': t_on, 'events': len(res.events),
+                         'overhead_frac': t_on / t_off - 1.0})
+    return {
+        'nodesim_wall_s_events_off': base_total,
+        'nodesim_wall_s_events_on': on_total,
+        'events_published': n_events,
+        'overhead_frac': on_total / base_total - 1.0,
+        'per_pair': per_pair,
+    }
+
+
+def run(out_path: str = 'results/api_overhead.json',
+        bench_path: str = 'BENCH_api.json',
+        horizon_s: float = 120.0) -> Dict:
+    mi = micro()
+    ma = macro(horizon_s=horizon_s)
+    # explicit raise (not assert): this gate must hold even under -O
+    if ma['overhead_frac'] >= MACRO_GATE:
+        raise RuntimeError(
+            f"event bus adds {ma['overhead_frac']:.1%} to NodeSim wall "
+            f"time (gate: <{MACRO_GATE:.0%})")
+    result = {'micro': mi, 'macro': ma, 'gate_overhead_max': MACRO_GATE}
+    os.makedirs(os.path.dirname(out_path) or '.', exist_ok=True)
+    for path in (out_path, bench_path):
+        with open(path, 'w') as f:
+            json.dump(result, f, indent=1)
+    print(f"session alloc+free {mi['session_alloc_free_us']:.2f}us "
+          f"(pool {mi['pool_alloc_free_us']:.2f}us, "
+          f"{mi['session_alloc_overhead_x']:.2f}x); "
+          f"notify {mi['session_notify_us']:.2f}us "
+          f"({mi['session_notify_overhead_x']:.2f}x); "
+          f"publish {mi['event_publish_us']:.2f}us")
+    print(f"NodeSim events on/off: {ma['nodesim_wall_s_events_on']:.3f}s / "
+          f"{ma['nodesim_wall_s_events_off']:.3f}s "
+          f"(+{ma['overhead_frac']:.1%}, {ma['events_published']} events, "
+          f"gate <{MACRO_GATE:.0%})")
+    return result
+
+
+if __name__ == '__main__':
+    run()

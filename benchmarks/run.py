@@ -27,6 +27,7 @@ BENCHES = [
     ('cluster_harvest', 'paper §6–7 — closed-loop NodeSim-telemetry fleet'),
     ('roofline', 'supporting analysis — dry-run roofline table'),
     ('serve_throughput', 'serving plane — batched prefill vs seed + node demo'),
+    ('api_overhead', 'control-plane API v1 — session/event hot-path cost'),
 ]
 
 
@@ -55,6 +56,8 @@ def main():
                 mod.run(steps=100)
             elif args.fast and name == 'cluster_harvest':
                 mod.run(n_nodes=8, epoch_s=30.0, n_epochs=4)
+            elif args.fast and name == 'api_overhead':
+                mod.run(horizon_s=60.0)
             else:
                 mod.run()
         except Exception:

@@ -7,23 +7,43 @@
 # src/repro/kernels/common.py), so a jax bump that breaks them fails loudly
 # at the top of the log instead of somewhere inside the full run.
 #
-# Usage:  scripts/ci.sh [--kernels-only]
+# Usage:  scripts/ci.sh [--kernels-only|--regen-api]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+if [[ "${1:-}" == "--regen-api" ]]; then
+    # deliberate public-API change: refresh the pinned snapshot
+    python -m repro.core.api > tests/api_surface.txt
+    echo "regenerated tests/api_surface.txt ($(wc -l < tests/api_surface.txt) lines)"
+    exit 0
+fi
+
 echo "== jax version: $(python -c 'import jax; print(jax.__version__)')"
 
 echo "== valve patch surface =="
-# single source of truth for the count lives in tests/test_patch_surface.py
+# single source of truth for the counts lives in tests/test_patch_surface.py
 python - <<'PY'
 import sys
 sys.path.insert(0, 'tests')
-from test_patch_surface import patch_loc
-loc = patch_loc()
+from test_patch_surface import patch_loc, session_patch_loc
+loc, sloc = patch_loc(), session_patch_loc()
 print(f'framework-side patch: {loc} LOC (paper Table 1 contract: < 20)')
+print(f'session-API integration: {sloc} tagged lines (open/mint/admit/'
+      f'finish/gate/notify)')
 assert 0 < loc < 20, loc
+assert 0 < sloc < 10, sloc
+PY
+
+echo "== control-plane API surface (pinned snapshot) =="
+python - <<'PY'
+from repro.core.api import api_surface
+want = open('tests/api_surface.txt').read().splitlines()
+got = api_surface()
+assert got == want, ('public API drifted from tests/api_surface.txt — '
+                     'if intentional, run scripts/ci.sh --regen-api')
+print(f'API surface matches snapshot ({len(got)} lines)')
 PY
 
 echo "== node demo smoke (heterogeneous colocation) =="

@@ -9,7 +9,10 @@ actually does.  Here the loop is closed:
 1. **scout** — every GPU of every node runs one online-only ``NodeSim``
    epoch; its measured busy intervals and free-memory trace become the
    ``NodeTelemetry`` the Eq. 1 model scores (``source='nodesim'``, never
-   hand-written);
+   hand-written).  Per-epoch runtime counters (preemptions, reclamations)
+   are read from each sim's :class:`~repro.core.telemetry.TelemetryRegistry`
+   — the fold over the typed event stream of :mod:`repro.core.events` —
+   so the harness observes the same ordered facts as the live node;
 2. **profile** — each offline workload's memory→throughput curve is
    measured by sweeping ``NodeSim`` at different pool sizes
    (:func:`profile_workload_from_sim`), not synthesized;
@@ -272,10 +275,12 @@ class ClusterHarness:
                 gpus.append(telemetry_from_sim(res, window=c.epoch_s))
                 rep.offline_tokens += res.offline_tokens
                 rep.recompute_tokens += res.recompute_tokens
-                if res.compute_stats is not None:
-                    rep.compute_preemptions += res.compute_stats.preemptions
-                if getattr(res.mem_stats, 'reclamations', 0):
-                    rep.reclamations += res.mem_stats.reclamations
+                # counters come from the sim's TelemetryRegistry (the fold
+                # over its typed event stream — the same surface the live
+                # node exposes), not from per-policy stat objects
+                tel = res.telemetry.counters
+                rep.compute_preemptions += tel.preemptions
+                rep.reclamations += tel.reclamations
                 if p is not None:
                     job_tokens.setdefault(p.job.job_id, []).append(
                         res.offline_tokens / max(res.horizon, 1e-9))

@@ -88,12 +88,17 @@ class ReclamationController:
                  on_invalidate: Optional[InvalidationCallback] = None,
                  policy: str = 'valve',
                  cost_of: Optional[Callable[[str], float]] = None,
-                 rate_window_s: float = 60.0):
+                 rate_window_s: float = 60.0,
+                 bus=None):
         assert policy in ('valve', 'fifo'), policy
         self.pool = pool
         self.gate_is_closed = gate_is_closed
         self.on_invalidate = on_invalidate
         self.policy = policy
+        # optional typed event stream (repro.core.events.EventBus): each
+        # reclamation publishes one ReclamationEvent before the framework
+        # callback fires, so subscribers see the fact before the reaction
+        self.bus = bus
         # default COST(r): tokens already materialized = pages × page_size
         self.cost_of = cost_of or (
             lambda r: len(pool.pages_of.get(r, ())) * pool.page_size)
@@ -138,6 +143,14 @@ class ReclamationController:
         self.stats.tokens_lost += sum(
             len(v) * self.pool.page_size for v in invalidated.values())
         self.rate.note(now)
+
+        if self.bus is not None:
+            from repro.core.events import ReclamationEvent
+            self.bus.publish(
+                ReclamationEvent, n_handles=len(victims),
+                requests=tuple(sorted(invalidated)),
+                pages=sum(len(v) for v in invalidated.values()),
+                gate_closed=True)
 
         if self.on_invalidate is not None and invalidated:
             self.on_invalidate(invalidated)

@@ -10,20 +10,41 @@ Composes the four mechanisms into the joint bound the paper is named for:
 - **memory safety**: reclamation goes through :class:`ReclamationController`
   (compute-first ordering, quarantine remap, invalidated-ID callback).
 
+**Control-plane API v1** (see ``docs/API.md``): frameworks integrate through
+:meth:`open_session` (class-scoped :class:`~repro.core.api.ValveSession`
+handles that own alloc/notify/gate-check/invalidation routing) and observe
+through :meth:`subscribe` (the typed event stream of
+:mod:`repro.core.events`).  Every counter in ``runtime.stats`` /
+``lifecycle.stats`` is *derived from the event stream* by the
+:class:`~repro.core.telemetry.TelemetryRegistry` at ``runtime.telemetry`` —
+the hot path publishes facts, never hand-syncs counters, and
+:meth:`check_invariants` checks the event log.
+
+The klass-string methods (``alloc_online``/``alloc_offline``/``free_*``) and
+the per-request invalidation route table (``bind_invalidation``/
+``unbind_invalidation``) are **deprecated shims** over hidden legacy
+sessions; new integrations should hold a session.
+
 The runtime is clock-agnostic: a :class:`RealClock` drives the live demo and
 a :class:`VirtualClock` drives the discrete-event simulator, so the paper's
 §7.2 experiments exercise *this* code, not a model of it.
 """
 from __future__ import annotations
 
+import dataclasses
+import itertools
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Type
 
 from repro.core.clock import RealClock
+from repro.core.events import (
+    EventBus, MemoryPressureEvent, PreemptionEvent, ReservationChangeEvent,
+    RuntimeEvent, WakeupEvent)
 from repro.core.gate import DeviceGate, GateGroup
 from repro.core.lifecycle import OnlineLifecycleTracker
 from repro.core.miad import MIADConfig, MIADReservation
 from repro.core.reclamation import InvalidationCallback, ReclamationController
+from repro.core.telemetry import TelemetryRegistry
 from repro.serving.kvpool import KVPool
 
 
@@ -35,15 +56,24 @@ class RuntimeConfig:
     policy: str = 'valve'              # eviction policy: 'valve' | 'fifo'
     miad: MIADConfig = field(default_factory=MIADConfig)
     t_cool_init: float = 0.010
+    # bounded replay log / latency reservoir sizes (telemetry memory bound)
+    event_log_maxlen: int = 65536
+    latency_reservoir: int = 512
     # memory mode (paper §7.2 baselines live in core/sim/strategies.py; the
     # real runtime always runs the paper's OurMem path)
 
 
 @dataclass
 class RuntimeStats:
+    """Legacy counter mirror — populated by the TelemetryRegistry from the
+    event stream (never mutated by the runtime hot path).  Reads are fine;
+    new code should prefer ``runtime.telemetry.snapshot()``.
+    ``preemption_latencies`` is a bounded
+    :class:`~repro.core.telemetry.LatencySummary` (list-like while small;
+    ``.raw``/``.summary()`` for tests and reports)."""
     compute_preemptions: int = 0
     offline_wakeups: int = 0
-    preemption_latencies: List[float] = field(default_factory=list)
+    preemption_latencies: object = field(default_factory=list)
     memory_pressure_events: int = 0
 
 
@@ -56,9 +86,22 @@ class ValveRuntime:
         self.cfg = cfg or RuntimeConfig()
         self.clock = clock or RealClock()
         self.pool = pool
-        # invalidation fan-out: request id → the owning engine's callback.
-        # Engines bind at submit / unbind at finish; ids with no binding fall
-        # back to the legacy single ``on_invalidate`` callback (if any).
+        # -- control plane: event stream + derived telemetry ------------
+        self.bus = EventBus(self.clock, log_maxlen=self.cfg.event_log_maxlen)
+        self.lifecycle = OnlineLifecycleTracker(
+            t_cool_init=self.cfg.t_cool_init)
+        self.stats = RuntimeStats()
+        self.telemetry = TelemetryRegistry(
+            self.bus, stats=self.stats, lifecycle=self.lifecycle,
+            latency_cap=self.cfg.latency_reservoir)
+        # -- sessions: name → session; request id → owning session ------
+        self.sessions: Dict[str, object] = {}
+        self._session_seq = itertools.count()
+        self._owner: Dict[str, object] = {}
+        self._legacy_sessions: Dict[str, object] = {}
+        # deprecated per-request invalidation route table (bind/unbind);
+        # ids with neither a session owner nor a bound route fall back to
+        # the legacy single ``on_invalidate`` callback (if any)
         self._invalidation_route: Dict[str, InvalidationCallback] = {}
         self._invalidation_fallback = on_invalidate
         # gates share the runtime clock so sim runs record modeled (and
@@ -67,9 +110,6 @@ class ValveRuntime:
             [DeviceGate(i, self.cfg.gate_op_latency_s, clock=self.clock)
              for i in range(self.cfg.n_devices)],
             mode=self.cfg.gate_mode, clock=self.clock)
-        self.lifecycle = OnlineLifecycleTracker(
-            t_cool_init=self.cfg.t_cool_init)
-        import dataclasses
         miad_cfg = dataclasses.replace(
             self.cfg.miad, h_max=min(self.cfg.miad.h_max, pool.n_handles))
         self.miad = MIADReservation(h_init=len(pool.reserved), cfg=miad_cfg)
@@ -77,27 +117,94 @@ class ValveRuntime:
             pool,
             gate_is_closed=lambda: self.gates.all_disabled,
             on_invalidate=self._route_invalidation,
-            policy=self.cfg.policy)
-        self.stats = RuntimeStats()
+            policy=self.cfg.policy,
+            bus=self.bus)
 
     # ------------------------------------------------------------------
-    # Invalidation fan-out (multi-engine nodes: each invalidated request
-    # is surfaced to the engine that owns it, not one global callback)
+    # Control-plane API v1: sessions + event subscription
+    # ------------------------------------------------------------------
+    def open_session(self, klass: str, name: Optional[str] = None, *,
+                     on_invalidate: Optional[InvalidationCallback] = None):
+        """Open a class-scoped session (the framework integration handle).
+
+        ``name`` must be unique per runtime (it prefixes minted request
+        ids); defaults to ``{klass}{n}`` in open order (monotonic — names
+        are never reissued after a close).
+        """
+        from repro.core.api import ValveSession
+        if name is None:
+            name = f'{klass}{next(self._session_seq)}'
+        assert name not in self.sessions, f'duplicate session name {name!r}'
+        sess = ValveSession(self, klass, name, on_invalidate=on_invalidate)
+        self.sessions[name] = sess
+        return sess
+
+    def subscribe(self, callback: Callable[[RuntimeEvent], None],
+                  event_type: Optional[Type[RuntimeEvent]] = None
+                  ) -> Callable[[], None]:
+        """Observe the typed event stream; returns an unsubscribe thunk."""
+        return self.bus.subscribe(callback, event_type)
+
+    def invalidation_routes(self) -> List[str]:
+        """Live request ids with a delivery route (session ownership or a
+        legacy bound callback).  Terminal paths must drain this to empty —
+        pinned by the node-run regression test."""
+        return sorted(set(self._owner) | set(self._invalidation_route))
+
+    # -- session internals (called by ValveSession) ---------------------
+    def _session_alloc(self, sess, req_id: str, n_pages: int
+                       ) -> Optional[List[int]]:
+        if sess.klass == 'online':
+            got = self._alloc_online(req_id, n_pages)
+        else:
+            got = self._alloc_offline(req_id, n_pages)
+        if got is not None:
+            self._owner[req_id] = sess
+        return got
+
+    def _session_free(self, sess, req_id: str) -> None:
+        self.pool.free(req_id)
+        self._owner.pop(req_id, None)
+
+    def _session_owned(self, sess) -> List[str]:
+        return sorted(r for r, s in self._owner.items() if s is sess)
+
+    def _session_closed(self, sess) -> None:
+        self.sessions.pop(sess.name, None)
+
+    def _legacy_session(self, klass: str):
+        """Hidden sessions backing the deprecated klass-string methods."""
+        sess = self._legacy_sessions.get(klass)
+        if sess is None:
+            from repro.core.api import ValveSession
+            sess = ValveSession(self, klass, f'legacy-{klass}')
+            self._legacy_sessions[klass] = sess
+        return sess
+
+    # ------------------------------------------------------------------
+    # Invalidation fan-out: one reclamation's {req: pages} is split by the
+    # OWNING SESSION (allocation records ownership, so same-class engines
+    # cannot mis-route) and delivered once per session callback.
     # ------------------------------------------------------------------
     def bind_invalidation(self, req_id: str, cb: InvalidationCallback) -> None:
+        """DEPRECATED — open a session with ``on_invalidate`` instead; the
+        session routes by ownership and cannot leak route entries."""
         self._invalidation_route[req_id] = cb
 
     def unbind_invalidation(self, req_id: str) -> None:
+        """DEPRECATED — see :meth:`bind_invalidation`."""
         self._invalidation_route.pop(req_id, None)
 
     def _route_invalidation(self, invalidated: Dict[str, List[int]]) -> None:
-        """Split one reclamation's {req: pages} by owning engine and deliver
-        each group through that engine's bound callback (one call per engine,
-        preserving the single-callback patch-surface contract per engine)."""
-        groups: Dict[InvalidationCallback, Dict[str, List[int]]] = {}
+        groups: Dict[object, Dict[str, List[int]]] = {}
         unrouted: Dict[str, List[int]] = {}
         for rid, pages in invalidated.items():
-            cb = self._invalidation_route.get(rid)
+            sess = self._owner.get(rid)
+            # a session without its own callback (e.g. the hidden legacy
+            # sessions behind the klass-string shims) must not shadow a
+            # per-request bound route — fall through to it
+            cb = (sess.on_invalidate if sess is not None else None) \
+                or self._invalidation_route.get(rid)
             if cb is None:
                 unrouted[rid] = pages
             else:
@@ -106,15 +213,20 @@ class ValveRuntime:
             cb(group)
         if unrouted and self._invalidation_fallback is not None:
             self._invalidation_fallback(unrouted)
+        # route lifetime == page lifetime: the pool freed these requests
+        # during reclamation, so their routes die with them (re-admission
+        # re-allocates and re-routes through the owning session)
+        for rid in invalidated:
+            self._owner.pop(rid, None)
 
     # ------------------------------------------------------------------
-    # Online engine hooks (the online framework calls these; total patch
-    # surface on the online side is request/iteration notifications).
+    # Online engine hooks (sessions call these; total patch surface on the
+    # online side is request/iteration notifications).
     # ------------------------------------------------------------------
     def on_online_request_start(self, req_id: str) -> None:
         now = self.clock.now()
         self.lifecycle.request_start(req_id, now)
-        self._preempt_offline_if_running(now)
+        self._preempt_offline_if_running(trigger='lifecycle')
 
     def on_online_request_end(self, req_id: str) -> None:
         self.lifecycle.request_end(req_id, self.clock.now())
@@ -122,38 +234,38 @@ class ValveRuntime:
     def on_online_iteration_start(self) -> None:
         now = self.clock.now()
         self.lifecycle.iteration_start(now)
-        self._preempt_offline_if_running(now)
+        self._preempt_offline_if_running(trigger='lifecycle')
 
     def on_online_iteration_end(self) -> None:
         self.lifecycle.iteration_end(self.clock.now())
 
-    def _preempt_offline_if_running(self, now: float) -> None:
+    def _preempt_offline_if_running(self, trigger: str) -> None:
         if not self.gates.all_disabled:
             latency = self.gates.disable_all()
-            self.stats.compute_preemptions += 1
-            self.stats.preemption_latencies.append(latency)
-            self.lifecycle.note_preemption(now)
+            self.bus.publish(
+                PreemptionEvent, latency_s=latency,
+                requests=tuple(sorted(self.lifecycle.active)),
+                trigger=trigger)
 
     # ------------------------------------------------------------------
-    # Memory plane
+    # Memory plane (session-internal; the klass-string methods below are
+    # deprecated shims over hidden legacy sessions)
     # ------------------------------------------------------------------
-    def alloc_online(self, req_id: str, n_pages: int) -> Optional[List[int]]:
+    def _alloc_online(self, req_id: str, n_pages: int) -> Optional[List[int]]:
         """Allocate online KV pages from the MIAD reservation; on shortfall,
         reclaim offline handles (compute-first) to cover it."""
         got = self.pool.alloc(req_id, n_pages, klass='online')
         if got is not None:
             return got
         now = self.clock.now()
-        self.stats.memory_pressure_events += 1
         deficit = n_pages - self.pool.free_pages_for('online')
+        self.bus.publish(MemoryPressureEvent, req_id=req_id,
+                         deficit_pages=deficit)
         n_handles = -(-deficit // self.pool.pph)  # ceil
         self._with_gates_closed_reclaim(n_handles, now)
         return self.pool.alloc(req_id, n_pages, klass='online')
 
-    def free_online(self, req_id: str) -> None:
-        self.pool.free(req_id)
-
-    def alloc_offline(self, req_id: str, n_pages: int) -> Optional[List[int]]:
+    def _alloc_offline(self, req_id: str, n_pages: int) -> Optional[List[int]]:
         got = self.pool.alloc(req_id, n_pages, klass='offline')
         if got is not None:
             now = self.clock.now()
@@ -161,18 +273,28 @@ class ValveRuntime:
                 self.reclaimer.note_handle_use(self.pool.handle_of(p), now)
         return got
 
+    def alloc_online(self, req_id: str, n_pages: int) -> Optional[List[int]]:
+        """DEPRECATED — use ``open_session('online').alloc`` instead."""
+        return self._legacy_session('online').alloc(req_id, n_pages)
+
+    def free_online(self, req_id: str) -> None:
+        """DEPRECATED — use the owning session's ``free``/``finish``."""
+        self._legacy_session('online').free(req_id)
+
+    def alloc_offline(self, req_id: str, n_pages: int) -> Optional[List[int]]:
+        """DEPRECATED — use ``open_session('offline').alloc`` instead."""
+        return self._legacy_session('offline').alloc(req_id, n_pages)
+
     def free_offline(self, req_id: str) -> None:
-        self.pool.free(req_id)
+        """DEPRECATED — use the owning session's ``free``/``finish``."""
+        self._legacy_session('offline').free(req_id)
 
     def _with_gates_closed_reclaim(self, n_handles: int, now: float
                                    ) -> Dict[str, List[int]]:
         """Paper §5 ordering: compute gate closes before any page moves."""
         was_open = not self.gates.all_disabled
         if was_open:
-            latency = self.gates.disable_all()
-            self.stats.compute_preemptions += 1
-            self.stats.preemption_latencies.append(latency)
-            self.lifecycle.note_preemption(now)
+            self._preempt_offline_if_running(trigger='memory')
         try:
             inv = self.reclaimer.reclaim(n_handles, now)
             self.miad.note_reclamation(now)
@@ -183,19 +305,25 @@ class ValveRuntime:
 
     def _wake_offline(self) -> None:
         """Re-enable offline compute — the ONLY path that opens the gates,
-        so ``stats.offline_wakeups`` always agrees with gate enable counts
+        so the WakeupEvent count always agrees with gate enable counts
         (both the tick path and the reclaim finally-branch go through it)."""
+        now = self.clock.now()
         self.gates.enable_all()
-        self.stats.offline_wakeups += 1
-        self.lifecycle.stats.wakeups += 1
+        self.bus.publish(WakeupEvent,
+                         idle_for_s=self.lifecycle.idle_for(now),
+                         t_cool_s=self.lifecycle.t_cool)
 
     # ------------------------------------------------------------------
     # Periodic tick: MIAD reservation + offline wake-up
     # ------------------------------------------------------------------
     def tick(self) -> None:
         now = self.clock.now()
+        h0 = len(self.pool.reserved)
         h_target = self.miad.on_tick(now, self.pool.online_used_handles())
         self._apply_reservation(h_target, now)
+        if len(self.pool.reserved) != h0:
+            self.bus.publish(ReservationChangeEvent, h_before=h0,
+                             h_after=len(self.pool.reserved), reason='miad')
         if self.gates.all_disabled and self.lifecycle.may_wake_offline(now):
             self._wake_offline()
 
@@ -227,17 +355,21 @@ class ValveRuntime:
 
     # ------------------------------------------------------------------
     def check_invariants(self) -> None:
+        """The paper's §4–5 invariants, checked against the EVENT LOG (the
+        source every counter derives from) rather than hand-synced fields:
+        ≤ 1 preemption per online request, wake-ups == gate enables, §5
+        compute-first ordering, T_cool wake rule."""
         self.pool.check_invariants()
         assert self.reclaimer.stats.ordering_violations == 0
-        # wake-up accounting is unified: every gate enable is one counted
-        # offline wake-up (gates start enabled without an enable() call)
-        for g in self.gates.gates:
-            assert g.stats.enables == self.stats.offline_wakeups, \
-                (g.device_id, g.stats.enables, self.stats.offline_wakeups)
-        assert self.stats.offline_wakeups == self.lifecycle.stats.wakeups
-        # at-most-one compute preemption per online request (paper §4.2)
-        for req, n in self.lifecycle.stats.preempted_requests.items():
-            assert n <= 1, f'request {req} preempted {n}× (> 1)'
+        self.telemetry.check_invariants(gates=self.gates)
+        # the legacy mirrors must agree with the event-derived counters
+        # (they are written only by the registry, so drift means a bug)
+        tel = self.telemetry.counters
+        assert self.stats.compute_preemptions == tel.preemptions
+        assert self.stats.offline_wakeups == tel.wakeups
+        assert self.lifecycle.stats.wakeups == tel.wakeups
 
     def close(self) -> None:
+        for sess in list(self.sessions.values()):
+            sess.close()
         self.gates.close()

@@ -25,10 +25,14 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.events import (
+    EventBus, MemoryPressureEvent, PreemptionEvent, ReclamationEvent,
+    WakeupEvent)
 from repro.core.sim.strategies import (
     AllocResult, Channel, ComputePolicy, GPreempt, KernelPreempt,
     MemoryPolicy, OurMem, Prism, StaticMem, UVM)
 from repro.core.sim.workload import OnlineRequest, WorkloadPair
+from repro.core.telemetry import TelemetryRegistry
 
 
 @dataclass
@@ -95,6 +99,11 @@ class SimResult:
     # (the real engine returns a max-context error; admitting head-of-line
     # would block the queue forever)
     rejected: List[str] = field(default_factory=list)
+    # -- the control-plane view (same typed stream the live runtime emits):
+    # a TelemetryRegistry folding the sim's event bus — the cluster harness
+    # reads these counters instead of scraping compute/mem stat objects
+    telemetry: Optional[TelemetryRegistry] = None
+    events: List[object] = field(default_factory=list)
 
     @property
     def offline_throughput(self) -> float:
@@ -108,12 +117,21 @@ class SimResult:
 class NodeSim:
     def __init__(self, pair: WorkloadPair, compute: Optional[ComputePolicy],
                  memory: MemoryPolicy, cfg: Optional[SimConfig] = None,
-                 *, offline_enabled: bool = True):
+                 *, offline_enabled: bool = True, events: bool = True):
         self.pair = pair
         self.cp = compute
         self.mp = memory
         self.cfg = cfg or SimConfig()
         self.offline_enabled = offline_enabled
+        # typed event stream (identical shape to the live runtime's):
+        # preemptions, reclamations (gate_closed=False for the baselines
+        # that move pages under running compute — their §5 violation made
+        # visible), wake-ups.  ``events=False`` is the overhead-measurement
+        # baseline for benchmarks/api_overhead.py.
+        self.bus = EventBus() if events else None
+        self.telemetry = (TelemetryRegistry(self.bus)
+                          if self.bus is not None else None)
+        self._gated_since_wake = False
 
         self.now = 0.0
         self.arriv = list(pair.online.requests)
@@ -195,6 +213,19 @@ class NodeSim:
                        if t in self.off_running or t in self.off_pending]
             self.off_inflight = (kind, t0, targets)
 
+    def _publish_wakeup(self) -> None:
+        """First offline dispatch after a preemption = the wake-up; record
+        the §4.2 wake-rule inputs (idle span vs T_cool) when the compute
+        policy tracks them (Channel — the Valve path)."""
+        if self.bus is None or not self._gated_since_wake:
+            return
+        lc = getattr(self.cp, 'lifecycle', None)
+        self.bus.publish(
+            WakeupEvent, t=self.now,
+            idle_for_s=lc.idle_for(self.now) if lc is not None else 0.0,
+            t_cool_s=lc.t_cool if lc is not None else 0.0)
+        self._gated_since_wake = False
+
     def _off_start_dispatch(self) -> bool:
         """Start one offline dispatch at self.now if there is work."""
         if not self.offline_enabled:
@@ -211,10 +242,12 @@ class NodeSim:
             dur = r.prefill_tokens * self.cfg.t_prefill_per_token
             self.off_inflight = ('prefill', self.now, [r])
             self.off_busy_until = self.now + dur
+            self._publish_wakeup()
             return True
         if self.off_running:
             self.off_inflight = ('decode', self.now, list(self.off_running))
             self.off_busy_until = self.now + self.cfg.t_decode_iter
+            self._publish_wakeup()
             return True
         return False
 
@@ -254,6 +287,11 @@ class NodeSim:
         # aren't executing)
         active_ids = {s.req.req_id for s in self.active}
         self.cp.note_preemption(active_ids, delay)
+        if self.bus is not None:
+            self.bus.publish(PreemptionEvent, t=online_t, latency_s=delay,
+                             requests=tuple(sorted(active_ids)),
+                             trigger='lifecycle')
+        self._gated_since_wake = True
         if isinstance(self.cp, KernelPreempt):
             # drain: the offline iteration completes
             self.off_busy_until = online_t + delay
@@ -332,6 +370,16 @@ class NodeSim:
                 continue
             res = self.mp.alloc_online(st.req.req_id,
                                        self._pages_for(st.req), self.now)
+            if res.reclaimed and self.bus is not None:
+                self.bus.publish(MemoryPressureEvent, t=self.now,
+                                 req_id=st.req.req_id,
+                                 deficit_pages=res.deficit_pages)
+                self.bus.publish(
+                    ReclamationEvent, t=self.now,
+                    n_handles=res.reclaimed_handles,
+                    requests=tuple(sorted(set(res.invalidated) | res.killed)),
+                    pages=sum(len(v) for v in res.invalidated.values()),
+                    gate_closed=res.gate_closed, killed=bool(res.killed))
             self._off_invalidate(res)
             if not res.ok:
                 break                       # head-of-line blocks (Prism)
@@ -477,6 +525,11 @@ class NodeSim:
         if self.cp:
             self.result.max_preempt_per_request = max(
                 self.cp.stats.per_request.values(), default=0)
+        # the control-plane view: the same ordered facts the live runtime
+        # publishes, folded by the same registry the orchestrator reads
+        self.result.telemetry = self.telemetry
+        if self.bus is not None:
+            self.result.events = list(self.bus.log)
         return self.result
 
 

@@ -147,6 +147,13 @@ class AllocResult:
     # the offline engine's recompute queue)
     invalidated: Dict[str, List[int]] = field(default_factory=dict)
     killed: Set[str] = field(default_factory=set)
+    # -- reclamation facts (the sim publishes these as typed events, so all
+    # consumers observe the same stream the live runtime emits) --
+    reclaimed: bool = False          # a reclamation/eviction pass ran
+    gate_closed: bool = False        # offline compute was disabled first
+    #                                  (§5 ordering — only OurMem holds it)
+    reclaimed_handles: int = 0
+    deficit_pages: int = 0           # shortfall that triggered the pass
 
 
 class MemoryPolicy:
@@ -220,10 +227,14 @@ class UVM(MemoryPolicy):
         deficit = pages - self.free_pages()
         if deficit > 0:
             inv, freed = self._take_offline_victims(deficit, now)
-            # UVM can't coordinate with the framework: victims are killed
+            # UVM can't coordinate with the framework: victims are killed,
+            # and pages move while offline compute still runs (the §5
+            # ordering violation the event stream makes visible)
             r.killed = set(inv.keys())
             r.invalidated = inv
             r.delay = pages * self.FAULT_PER_PAGE
+            r.reclaimed, r.gate_closed = True, False
+            r.deficit_pages = deficit
             self.stats.offline_kills += len(inv)
             self.stats.reclamations += 1
             if freed < deficit:
@@ -267,6 +278,8 @@ class StaticMem(MemoryPolicy):
             inv, freed = self._take_offline_victims(deficit, now)
             r.killed = set(inv.keys())
             r.invalidated = inv
+            r.reclaimed, r.gate_closed = True, False
+            r.deficit_pages = deficit
             self.stats.offline_kills += len(inv)
             if freed < deficit:
                 r.ok = False
@@ -316,6 +329,9 @@ class OurMem(MemoryPolicy):
             self.miad.note_reclamation(now)
             r.invalidated = inv             # surfaced, NOT killed: recompute
             r.delay = self.RECLAIM_LATENCY
+            r.reclaimed, r.gate_closed = True, True
+            r.reclaimed_handles = n_handles
+            r.deficit_pages = deficit
             self.stats.reclamations += 1
             self.stats.online_stall_total += r.delay
             self.stats.stall_events += 1

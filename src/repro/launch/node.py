@@ -14,9 +14,13 @@ two-engine alternation loop; this module owns that loop and drives it from
   engines so heterogeneous offline models share the harvested capacity;
 - ``runtime.tick()`` runs every step (MIAD reservation + wake-up checks).
 
-Invalidation callbacks fan out per owning engine through the runtime's
-request-id → engine routing (``bind_invalidation``), so N engines each keep
-their own < 20-LOC patch surface — no shared callback plumbing in drivers.
+Each engine holds a class-scoped :class:`~repro.core.api.ValveSession`;
+invalidations route to the owning session by allocation ownership, so N
+engines each keep their own < 20-LOC patch surface — no shared callback
+plumbing (and no per-request ``bind_invalidation`` table) in drivers.
+The orchestrator observes the runtime through the typed event stream
+(``runtime.subscribe``) and the unified telemetry registry
+(``runtime.telemetry``) — it never reaches into per-plane stat objects.
 """
 from __future__ import annotations
 
@@ -26,6 +30,8 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.core.events import (
+    PreemptionEvent, ReclamationEvent, RuntimeEvent, WakeupEvent)
 from repro.core.runtime import ValveRuntime
 from repro.models.api import build_model
 from repro.serving.engine import Engine, EngineConfig
@@ -38,6 +44,10 @@ class NodeStats:
     offline_dispatches: int = 0
     gated_skips: int = 0            # offline had work but gates were closed
     idle_steps: int = 0             # nothing dispatched this step
+    # event-stream observations (subscribed, not scraped from stat fields)
+    preemptions_seen: int = 0
+    wakeups_seen: int = 0
+    invalidation_bursts_seen: int = 0
 
 
 class NodeOrchestrator:
@@ -58,6 +68,17 @@ class NodeOrchestrator:
         # advance at all, livelocking drain()); works for both clock kinds
         self.idle_advance = idle_advance
         self._rr = 0                # round-robin cursor over offline engines
+        runtime.subscribe(self._on_runtime_event)
+
+    def _on_runtime_event(self, ev: RuntimeEvent) -> None:
+        """The orchestrator's view of runtime activity IS the event stream
+        (same ordered facts the sim and the cluster harness consume)."""
+        if isinstance(ev, PreemptionEvent):
+            self.stats.preemptions_seen += 1
+        elif isinstance(ev, WakeupEvent):
+            self.stats.wakeups_seen += 1
+        elif isinstance(ev, ReclamationEvent):
+            self.stats.invalidation_bursts_seen += 1
 
     # ------------------------------------------------------------------
     # Registration
@@ -157,7 +178,9 @@ class NodeOrchestrator:
         tpots = [r.tpot for r in on_fin if r.tpot and r.tpot > 0]
         off_tokens = sum(e.stats.tokens_generated for e in self.offline)
         off_recomp = sum(e.stats.tokens_recomputed for e in self.offline)
-        rt = self.runtime
+        # runtime counters come from the unified telemetry registry (the
+        # event-stream fold), not from per-plane stat objects
+        tel = self.runtime.telemetry.snapshot()
         return {
             'online_finished': len(on_fin),
             'offline_finished': sum(len(e.finished) for e in self.offline),
@@ -168,11 +191,12 @@ class NodeOrchestrator:
             'online_dispatches': self.stats.online_dispatches,
             'offline_dispatches': self.stats.offline_dispatches,
             'gated_skips': self.stats.gated_skips,
-            'compute_preemptions': rt.stats.compute_preemptions,
-            'offline_wakeups': rt.stats.offline_wakeups,
-            'reclamations': rt.reclaimer.stats.reclamations,
-            'max_preemptions_per_request': max(
-                rt.lifecycle.stats.preempted_requests.values(), default=0),
+            'compute_preemptions': tel['compute_preemptions'],
+            'offline_wakeups': tel['offline_wakeups'],
+            'reclamations': tel['reclamations'],
+            'max_preemptions_per_request':
+                tel['max_preemptions_per_request'],
+            'preemption_latency': tel['preemption_latency'],
             'live_online_requests': len(self.pool.request_ids('online')),
             'live_offline_requests': len(self.pool.request_ids('offline')),
             'engines': {

@@ -8,8 +8,11 @@ and one set of dispatch gates through the :class:`NodeOrchestrator`:
   online request, wake after T_cool); offline backfills whenever the gates
   are open — the loop is driven from gate state, not ad-hoc alternation;
 - online memory pressure reclaims offline handles (compute-first, quarantine
-  remap); invalidations fan out to the owning engine's < 20-LOC callback;
-- MIAD keeps the online reservation tracking demand.
+  remap); invalidations fan out to the owning engine's session (< 20-LOC
+  callback, routed by allocation ownership — see ``docs/API.md``);
+- MIAD keeps the online reservation tracking demand;
+- every preemption/reclamation/wake-up is published on the runtime's typed
+  event stream; the reported metrics derive from it (``runtime.telemetry``).
 
 Reports TTFT / TPOT for online and tokens/s for offline — the same metrics
 the paper's Fig. 10 uses; benchmarks/colocation_matrix.py runs the full
@@ -110,8 +113,13 @@ def serve_demo(*, arch: str = 'qwen3-0.6b',
     # throughput metrics reflect completed work, not a truncated run
     node.drain()
 
+    # event-log invariants (≤1 preemption/request, wakeups==gate-enables,
+    # §5 ordering) + the published-event census from the typed stream
     node.runtime.check_invariants()
     metrics = node.metrics()
+    metrics['events'] = dict(node.runtime.bus.published)
+    metrics['live_invalidation_routes'] = \
+        len(node.runtime.invalidation_routes())
     if not quiet:
         for k, v in metrics.items():
             if k == 'engines':

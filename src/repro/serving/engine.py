@@ -8,13 +8,13 @@ JAX dispatch over preallocated host buffers, so each entry point compiles
 once and no step reallocates numpy arrays.
 
 Valve integration points (and *only* these — Table 1's deployability claim):
-
-- **online side**: lifecycle notifications (`runtime.on_online_*`) around
-  requests/iterations, and page allocation through the runtime;
-- **offline side**: a gate check before each dispatch unit (a mixed
-  prefill+decode iteration or a pure decode iteration), and the < 20-LOC
-  invalidation patch (:meth:`Engine.on_pages_invalidated` — counted by
-  ``tests/test_patch_surface.py``).
+the engine holds ONE class-scoped :class:`~repro.core.api.ValveSession`
+(``runtime.open_session``), whose calls — admit/finish bundles, iteration
+notifications, the gate check — are tagged ``# VALVE-SESSION`` and counted
+by ``tests/test_patch_surface.py`` alongside the < 20-LOC invalidation
+patch (:meth:`Engine.on_pages_invalidated`).  The session owns invalidation
+routing by allocation ownership, so there is no per-request bind/unbind
+and no engine-instance id discriminator anymore.
 """
 from __future__ import annotations
 
@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.api import PoolSession
 from repro.core.clock import RealClock
 from repro.serving.kvpool import QUARANTINE_PAGE
 from repro.serving.sampler import sample
@@ -35,11 +36,6 @@ from repro.serving.scheduler import (
 
 # re-exported for compatibility: request bookkeeping moved to scheduler.py
 __all__ = ['Engine', 'EngineConfig', 'EngineStats', 'Request', 'ReqState']
-
-# engine-instance discriminator for generated request ids: the pool and the
-# runtime's invalidation router are keyed by request id NODE-wide, so two
-# engines of the same class must never mint colliding ids
-_ENGINE_SEQ = itertools.count()
 
 
 @dataclass
@@ -100,11 +96,17 @@ class Engine:
         self.pool = runtime.pool if runtime is not None else pool
         assert self.pool is not None, 'engine needs a KVPool or a runtime'
         self.clock = clock or (runtime.clock if runtime else RealClock())
+        # the complete Valve control-plane integration: one class-scoped
+        # session (alloc/notify/gate/invalidation-routing); a bare pool
+        # gets the same interface with no runtime behind it
+        if runtime is not None:
+            self.session = runtime.open_session(                # VALVE-SESSION
+                self.cfg.klass, on_invalidate=self.on_pages_invalidated)
+        else:
+            self.session = PoolSession(self.pool, self.cfg.klass)
         self.cache = model.init_cache(None, engine_pages=self.pool.n_pages)
         self.pg = self.mcfg.page_size
         self.maxp = self.cfg.max_seq // self.pg
-        self._seq = next(_ENGINE_SEQ)
-        self._ids = itertools.count()
         self.requests: Dict[str, Request] = {}
         self.sched = BatchScheduler(self.cfg.scheduler_config())
         # the scheduler owns the lists; the engine (and the Valve patch)
@@ -151,7 +153,9 @@ class Engine:
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 32,
                req_id: Optional[str] = None) -> str:
-        rid = req_id or f'{self.cfg.klass}{self._seq}-{next(self._ids)}'
+        # no bind step: invalidation routing follows allocation ownership
+        # (the session records it at admit, releases it at finish/reclaim)
+        rid = req_id or self.session.new_request_id()       # VALVE-SESSION
         assert len(prompt) > 0, 'empty prompt'
         assert len(prompt) + max_new_tokens <= self.cfg.max_seq, \
             (len(prompt), max_new_tokens, self.cfg.max_seq)
@@ -159,9 +163,6 @@ class Engine:
                       t_submit=self.clock.now())
         self.requests[rid] = req
         self.sched.submit(rid)
-        if self.runtime is not None:
-            # invalidation fan-out: route this request's callbacks here
-            self.runtime.bind_invalidation(rid, self.on_pages_invalidated)
         return rid
 
     # ------------------------------------------------------------------
@@ -177,12 +178,12 @@ class Engine:
             if req is None or req.state == ReqState.FINISHED \
                     or rid in self.queue:
                 continue
-            req.pages = []
-            req.n_prefilled = 0
+            # session routing delivers only page-holding (admitted) ids,
+            # so the request is in ``running`` by construction
+            req.pages, req.n_prefilled = [], 0
             req.recomputes += 1
             req.state = ReqState.WAITING
-            if rid in self.running:
-                self.running.remove(rid)
+            self.running.remove(rid)
             self.queue.insert(0, rid)
             self.stats.invalidations += 1
             self.stats.tokens_recomputed += len(req.context)
@@ -191,16 +192,6 @@ class Engine:
     # ------------------------------------------------------------------
     # Memory plumbing
     # ------------------------------------------------------------------
-    def _alloc(self, rid: str, n_pages: int) -> Optional[List[int]]:
-        if self.runtime is None:
-            return self.pool.alloc(rid, n_pages, klass=self.cfg.klass)
-        if self.cfg.klass == 'online':
-            return self.runtime.alloc_online(rid, n_pages)
-        return self.runtime.alloc_offline(rid, n_pages)
-
-    def _free(self, rid: str) -> None:
-        self.pool.free(rid)
-
     def _fill_page_table(self, row: np.ndarray, req: Request) -> np.ndarray:
         row.fill(QUARANTINE_PAGE)
         row[: len(req.pages)] = req.pages
@@ -210,32 +201,21 @@ class Engine:
     # Scheduling step
     # ------------------------------------------------------------------
     def _gated(self) -> bool:
-        return (self.cfg.klass == 'offline' and self.runtime is not None
-                and not self.runtime.offline_may_dispatch())
+        return not self.session.may_dispatch()              # VALVE-SESSION
 
     def _try_admit(self, req: Request) -> Optional[List[int]]:
-        """Admission callback for the scheduler: lifecycle + allocation."""
+        """Admission callback for the scheduler.  The session bundles the
+        lifecycle notification with the allocation — lifecycle first, so
+        the request's arrival closes the gates BEFORE any allocation can
+        trigger reclamation (one preemption covers both)."""
         need = -(-req.target_len // self.pg)
-        # lifecycle first: the request's arrival closes the gates BEFORE
-        # any allocation can trigger reclamation (one preemption covers
-        # both, and the wake check can't reopen gates mid-admission)
-        if self.runtime is not None and self.cfg.klass == 'online':
-            self.runtime.on_online_request_start(req.req_id)
-        pages = self._alloc(req.req_id, need)
-        if pages is None:
-            if self.runtime is not None and self.cfg.klass == 'online':
-                self.runtime.on_online_request_end(req.req_id)
-        return pages
+        return self.session.admit(req.req_id, need)         # VALVE-SESSION
 
     def _finish(self, req: Request) -> None:
         req.state = ReqState.FINISHED
         self.running.remove(req.req_id)
-        self._free(req.req_id)
+        self.session.finish(req.req_id)                     # VALVE-SESSION
         req.pages = []
-        if self.runtime is not None:
-            self.runtime.unbind_invalidation(req.req_id)
-            if self.cfg.klass == 'online':
-                self.runtime.on_online_request_end(req.req_id)
 
     # -- mixed prefill(+decode) dispatch -------------------------------------
     def _dispatch_mixed(self, batch: ScheduledBatch) -> None:
@@ -287,12 +267,9 @@ class Engine:
             'kv_len': jnp.asarray(m['kv_len']),
             'last_idx': jnp.asarray(m['last_idx']),
         }
-        online = self.runtime is not None and self.cfg.klass == 'online'
-        if online:
-            self.runtime.on_online_iteration_start()
+        self.session.iteration_start()                      # VALVE-SESSION
         self.cache, logits = self._mixed(self.params, self.cache, mb)
-        if online:
-            self.runtime.on_online_iteration_end()
+        self.session.iteration_end()                        # VALVE-SESSION
         self.stats.dispatches += 1
         self.stats.mixed_dispatches += 1
         self.stats.prefill_chunks += len(batch.prefill)
@@ -332,12 +309,9 @@ class Engine:
         db = {'tokens': jnp.asarray(d['toks']),
               'positions': jnp.asarray(d['poss']),
               'page_table': jnp.asarray(d['pts'])}
-        online = self.runtime is not None and self.cfg.klass == 'online'
-        if online:
-            self.runtime.on_online_iteration_start()
+        self.session.iteration_start()                      # VALVE-SESSION
         self.cache, logits = self._decode(self.params, self.cache, db)
-        if online:
-            self.runtime.on_online_iteration_end()
+        self.session.iteration_end()                        # VALVE-SESSION
         self.stats.dispatches += 1
         self.stats.decode_iterations += 1
         new = np.asarray(self._sample(logits))

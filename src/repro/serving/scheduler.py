@@ -16,10 +16,12 @@ the dispatch unit stays fixed-shape (``max_batch`` rows × ``chunk`` width —
 the preemptible unit the Valve gates check between).
 
 The scheduler is engine-agnostic: it never touches tensors, allocators or
-the runtime.  Admission (page allocation + online lifecycle notification)
-is delegated through a caller-supplied ``try_admit`` callable, which keeps
-the FIFO head-of-line-blocking policy here and the memory/lifecycle
-plumbing in the engine.  Request bookkeeping (:class:`Request`,
+the runtime.  Admission is delegated through a caller-supplied
+``try_admit`` callable — in the Valve integration that is one
+``session.admit`` call (the :class:`~repro.core.api.ValveSession` bundle:
+lifecycle notification, then allocation, with rollback on failure) — which
+keeps the FIFO head-of-line-blocking policy here and the control-plane
+plumbing behind the session API.  Request bookkeeping (:class:`Request`,
 :class:`ReqState`) lives here too — requests are scheduler domain; the
 engine re-exports them for compatibility.
 """

@@ -1,0 +1,207 @@
+"""Control-plane API v1: class-scoped sessions — ownership-routed
+invalidation delivery, admit/finish bundles, route lifetime == page
+lifetime, legacy klass-string shims preserved."""
+import pytest
+
+from repro.core.api import PoolSession, ValveSession
+from repro.core.clock import VirtualClock
+from repro.core.runtime import RuntimeConfig, ValveRuntime
+from repro.serving.kvpool import KVPool
+
+
+def _rt(n_handles=8, pph=4, **kw):
+    pool = KVPool(n_handles, pph, reserved_handles=1)
+    clock = VirtualClock()
+    rt = ValveRuntime(pool, RuntimeConfig(**kw), clock=clock)
+    return rt, pool, clock
+
+
+# ---------------------------------------------------------------------------
+# Session basics
+# ---------------------------------------------------------------------------
+
+def test_open_session_names_and_ids_are_scoped():
+    rt, _, _ = _rt()
+    a = rt.open_session('offline', name='batch-a')
+    b = rt.open_session('offline')          # auto-name (monotonic counter)
+    assert isinstance(a, ValveSession)
+    assert a.name == 'batch-a' and b.name == 'offline0'
+    assert a.new_request_id() == 'batch-a-0'
+    assert a.new_request_id() == 'batch-a-1'
+    assert b.new_request_id() == 'offline0-0'
+    with pytest.raises(AssertionError):
+        rt.open_session('offline', name='batch-a')      # duplicate name
+
+
+def test_session_alloc_records_ownership_and_free_releases_it():
+    rt, pool, _ = _rt()
+    s = rt.open_session('offline', name='s')
+    rid = s.new_request_id()
+    pages = s.alloc(rid, 3)
+    assert pages is not None
+    assert s.owned_requests() == [rid]
+    assert rt.invalidation_routes() == [rid]
+    s.free(rid)
+    assert s.owned_requests() == []
+    assert rt.invalidation_routes() == []
+    assert pool.pages_of_request(rid) == []
+
+
+def test_online_admit_bundles_lifecycle_and_rolls_back_on_failure():
+    rt, pool, clock = _rt(n_handles=2, pph=4)   # 1 reserved handle = 4 pages
+    s = rt.open_session('online', name='on')
+    # success: lifecycle sees the request, gates closed by its arrival
+    pool.alloc('off-x', 4, 'offline')           # fill the offline handle
+    got = s.admit('r0', 2)
+    assert got is not None
+    assert 'r0' in rt.lifecycle.active
+    assert not rt.offline_may_dispatch()
+    s.finish('r0')
+    assert 'r0' not in rt.lifecycle.active
+    # failure: pool exhausted beyond reclamation → lifecycle rolled back
+    big = s.admit('r1', 100)
+    assert big is None
+    assert 'r1' not in rt.lifecycle.active
+    assert rt.invalidation_routes() == []       # no route for the rejection
+
+
+def test_invalidation_routes_to_owning_session_same_class_no_crosstalk():
+    """Two OFFLINE sessions (the collision class the id-discriminator
+    workaround existed for): a reclamation touching both delivers each
+    request to ITS owner only."""
+    rt, pool, _ = _rt(n_handles=4, pph=4)
+    got_a, got_b = [], []
+    a = rt.open_session('offline', name='a',
+                        on_invalidate=lambda inv: got_a.append(sorted(inv)))
+    b = rt.open_session('offline', name='b',
+                        on_invalidate=lambda inv: got_b.append(sorted(inv)))
+    ra, rb = a.new_request_id(), b.new_request_id()
+    # interleave so both offline handles hold pages of both sessions
+    assert a.alloc(ra, 6) is not None
+    assert b.alloc(rb, 6) is not None
+    on = rt.open_session('online', name='on')
+    assert on.admit('burst', 10) is not None    # forces reclamation of both
+    assert got_a == [[ra]] and got_b == [[rb]]
+    # routes for invalidated requests die with their pages
+    assert ra not in rt.invalidation_routes()
+    assert rb not in rt.invalidation_routes()
+    rt.check_invariants()
+
+
+def test_reallocation_after_invalidation_reroutes():
+    rt, pool, _ = _rt(n_handles=4, pph=4)
+    deliveries = []
+    s = rt.open_session('offline', name='s',
+                        on_invalidate=lambda inv: deliveries.append(set(inv)))
+    rid = s.new_request_id()
+    assert s.alloc(rid, 12) is not None         # every offline handle live
+    on = rt.open_session('online', name='on')
+    assert on.admit('b0', 8) is not None
+    assert deliveries == [{rid}]
+    # the engine would requeue + re-admit: a fresh alloc re-routes the id
+    assert s.alloc(rid, 4) is not None
+    assert rid in rt.invalidation_routes()
+    s.finish(rid)
+    on.finish('b0')
+    assert rt.invalidation_routes() == []
+
+
+def test_session_close_releases_everything():
+    rt, pool, _ = _rt()
+    s = rt.open_session('offline', name='s')
+    rids = [s.new_request_id() for _ in range(3)]
+    for r in rids:
+        assert s.alloc(r, 2) is not None
+    s.close()
+    assert rt.invalidation_routes() == []
+    assert pool.used_pages_for('offline') == 0
+    assert 's' not in rt.sessions
+    with pytest.raises(AssertionError):
+        s.alloc('late', 1)                      # closed sessions refuse
+
+
+# ---------------------------------------------------------------------------
+# Legacy shims (deprecated klass-string methods must keep working)
+# ---------------------------------------------------------------------------
+
+def test_legacy_klass_methods_still_work_via_hidden_sessions():
+    rt, pool, _ = _rt()
+    pool.alloc('off-1', 10, 'offline')
+    got = rt.alloc_online('on-1', 8)            # forces reclamation
+    assert got is not None
+    assert rt.reclaimer.stats.reclamations == 1
+    rt.free_online('on-1')
+    assert rt.alloc_offline('off-2', 2) is not None
+    rt.free_offline('off-2')
+    rt.check_invariants()
+    assert rt.invalidation_routes() == []
+
+
+def test_legacy_bind_route_fallback_still_delivers():
+    """bind_invalidation (deprecated) still routes ids with no session
+    owner — the transition path for un-migrated frameworks."""
+    rt, pool, _ = _rt(n_handles=4, pph=4)
+    hits = []
+    pool.alloc('off-legacy', 12, 'offline')     # allocated around the runtime
+    rt.bind_invalidation('off-legacy', lambda inv: hits.append(set(inv)))
+    on = rt.open_session('online', name='on')
+    assert on.admit('b', 8) is not None
+    assert hits == [{'off-legacy'}]
+    rt.unbind_invalidation('off-legacy')
+    on.finish('b')
+    assert rt.invalidation_routes() == []
+
+
+def test_legacy_shim_alloc_does_not_shadow_bound_route():
+    """Regression: allocation through the deprecated klass-string shims
+    records the hidden legacy session as owner; a per-request bound
+    callback must still win over that session's (absent) callback."""
+    rt, pool, _ = _rt(n_handles=4, pph=4)
+    hits = []
+    assert rt.alloc_offline('r1', 12) is not None   # hidden legacy session
+    rt.bind_invalidation('r1', lambda inv: hits.append(set(inv)))
+    on = rt.open_session('online', name='on')
+    assert on.admit('b', 8) is not None
+    assert hits == [{'r1'}]
+    rt.unbind_invalidation('r1')
+    on.finish('b')
+    assert rt.invalidation_routes() == []
+
+
+def test_session_names_are_never_reissued_after_close():
+    rt, _, _ = _rt()
+    a = rt.open_session('offline')
+    b = rt.open_session('offline')
+    assert (a.name, b.name) == ('offline0', 'offline1')
+    b.close()
+    c = rt.open_session('offline')      # must not collide with 'offline1'
+    assert c.name == 'offline2'
+
+
+# ---------------------------------------------------------------------------
+# PoolSession (runtime-less engines keep the same call shape)
+# ---------------------------------------------------------------------------
+
+def test_pool_session_matches_interface():
+    pool = KVPool(4, 4, reserved_handles=1)
+    s = PoolSession(pool, 'offline', name='solo')
+    rid = s.new_request_id()
+    assert rid.startswith('solo-')
+    assert s.may_dispatch() is True
+    pages = s.admit(rid, 3)
+    assert pages == pool.pages_of_request(rid)
+    s.iteration_start(); s.iteration_end()      # no-ops, must not raise
+    s.finish(rid)
+    assert pool.pages_of_request(rid) == []
+    pool.check_invariants()
+
+
+def test_pool_session_ownership_is_name_segment_exact():
+    """'off1' must not claim 'off10-...' (prefix-collision regression)."""
+    pool = KVPool(4, 4, reserved_handles=1)
+    s1 = PoolSession(pool, 'offline', name='off1')
+    s10 = PoolSession(pool, 'offline', name='off10')
+    r10 = s10.new_request_id()
+    assert s10.alloc(r10, 2) is not None
+    assert s1.owned_requests() == []
+    assert s10.owned_requests() == [r10]

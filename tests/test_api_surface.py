@@ -1,0 +1,38 @@
+"""Public-API snapshot: the control-plane surface (sessions, runtime,
+events, telemetry) is pinned against ``tests/api_surface.txt`` so surface
+changes are deliberate, reviewed diffs.
+
+Regenerate after an intentional change:
+
+    scripts/ci.sh --regen-api
+    # (equivalently: PYTHONPATH=src python -m repro.core.api > tests/api_surface.txt)
+"""
+import os
+
+from repro.core.api import api_surface
+
+SNAPSHOT = os.path.join(os.path.dirname(__file__), 'api_surface.txt')
+
+
+def test_api_surface_matches_snapshot():
+    want = open(SNAPSHOT).read().splitlines()
+    got = api_surface()
+    added = sorted(set(got) - set(want))
+    removed = sorted(set(want) - set(got))
+    assert got == want, (
+        'public control-plane API changed — if intentional, regenerate '
+        'the snapshot with scripts/ci.sh --regen-api\n'
+        + ''.join(f'  + {l}\n' for l in added)
+        + ''.join(f'  - {l}\n' for l in removed))
+
+
+def test_surface_contains_the_v1_contract():
+    """Spot-check the names the docs promise (a deleted snapshot file must
+    not let the contract silently vanish)."""
+    text = '\n'.join(api_surface())
+    for needle in ('ValveSession.admit', 'ValveSession.finish',
+                   'ValveSession.may_dispatch', 'ValveRuntime.open_session',
+                   'ValveRuntime.subscribe', 'TelemetryRegistry.snapshot',
+                   'PreemptionEvent', 'ReclamationEvent', 'WakeupEvent',
+                   'ReservationChangeEvent', 'MemoryPressureEvent'):
+        assert needle in text, needle

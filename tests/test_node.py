@@ -129,6 +129,56 @@ def test_register_rejects_mismatched_engines():
                         _ecfg('offline'))
 
 
+def test_route_table_empty_after_burst_heavy_run():
+    """Route lifetime == page lifetime: after a burst-heavy run with
+    admission rejections, invalidations and a full drain, the runtime's
+    invalidation-route table must be EMPTY (the old per-request
+    ``bind_invalidation`` table leaked entries for requests that never
+    reached ``_finish``)."""
+    node = _node()
+    rng = np.random.default_rng(11)
+    rids = _submit_offline(node, rng)
+    for _ in range(4):
+        node.step()
+    # two online bursts: the first reclaims offline handles mid-decode,
+    # the second lands while memory is still tight (admission blocks at
+    # the queue head → exercises the admit-rejection rollback path)
+    for k in range(3):
+        node.online.submit(
+            rng.integers(1, node.online.mcfg.vocab_size, 20).tolist(),
+            max_new_tokens=8)
+    node.drain(max_steps=8000)
+    assert any(e.stats.invalidations >= 1 for e in node.offline)
+    assert node.runtime.invalidation_routes() == []
+    assert all(s.owned_requests() == []
+               for s in node.runtime.sessions.values())
+    node.runtime.check_invariants()
+    # every submitted request still completed exactly
+    for eng, rid in rids:
+        assert len(eng.output_tokens(rid)) == 8
+
+
+def test_node_observes_event_stream():
+    """The orchestrator subscribes to the typed stream; its event counters
+    must agree with the unified telemetry registry."""
+    node = _node()
+    rng = np.random.default_rng(12)
+    _submit_offline(node, rng)
+    for _ in range(4):
+        node.step()
+    node.online.submit(
+        rng.integers(1, node.online.mcfg.vocab_size, 28).tolist(),
+        max_new_tokens=12)
+    node.drain(max_steps=8000)
+    tel = node.runtime.telemetry.counters
+    assert node.stats.preemptions_seen == tel.preemptions >= 1
+    assert node.stats.wakeups_seen == tel.wakeups >= 1
+    assert node.stats.invalidation_bursts_seen == tel.reclamations >= 1
+    m = node.metrics()
+    assert m['compute_preemptions'] == tel.preemptions
+    assert m['preemption_latency']['count'] == tel.preemptions
+
+
 def test_node_metrics_shape():
     node = _node()
     rng = np.random.default_rng(5)
