@@ -1,0 +1,187 @@
+"""Memory-plane API v1 — shared-prefix reuse & partial-invalidation tax.
+
+Two experiments, one JSON (HyGen: shared-prefix offline batches are the
+dominant harvest workload; ConServe: harvesting lives or dies on cheap
+partial recompute):
+
+1. **Engine drain** — a shared-system-prompt offline batch drained through
+   the real engine with the prefix index ON vs OFF: greedy outputs must be
+   bit-identical, while prefill chunks / steps-to-completion / TTFT (in
+   scheduler steps) drop with sharing.
+2. **NodeSim burst** — a bursty online trace colocated with a shared-prefix
+   offline batch under Channel+OurMem in three memory-plane modes:
+   ``valve`` (partial invalidation + sharing), ``no-sharing`` (partial
+   only), and ``whole-invalidation`` (the pre-lease baseline: every
+   reclamation restarts its victims from token 0).  The acceptance bar:
+   recompute tokens under partial invalidation are strictly below the
+   whole-invalidation baseline.
+
+Writes ``results/prefix_reuse.json`` and mirrors it to ``BENCH_prefix.json``
+at the repo root (the perf-trajectory record).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# 1. Engine drain: sharing on vs off
+# ---------------------------------------------------------------------------
+
+def _engine_drain(sharing: bool, *, n_reqs: int = 8, prefix_tokens: int = 16,
+                  tail_tokens: int = 5, gen: int = 8, seed: int = 0) -> Dict:
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.core.memory import MemoryPlane
+    from repro.models.api import build_model
+    from repro.serving.engine import Engine, EngineConfig
+    from repro.serving.kvpool import KVPool
+
+    cfg = reduced(get_config('qwen3-0.6b'), page_size=4)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    pool = KVPool(n_handles=24, pages_per_handle=8, page_size=4,
+                  reserved_handles=1)
+    MemoryPlane(pool, sharing=sharing)
+    eng = Engine(model, params, pool,
+                 EngineConfig(max_batch=3, max_seq=48, prefill_chunk=8,
+                              klass='offline'))
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, cfg.vocab_size, prefix_tokens).tolist()
+    rids = [eng.submit(prefix
+                       + rng.integers(1, cfg.vocab_size, tail_tokens).tolist(),
+                       max_new_tokens=gen) for _ in range(n_reqs)]
+    ttft_steps: Dict[str, int] = {}
+    steps = 0
+    while eng.queue or eng.running:
+        eng.step()
+        steps += 1
+        for rid in rids:
+            if rid not in ttft_steps and eng.requests[rid].generated:
+                ttft_steps[rid] = steps
+        assert steps < 10_000
+    plane = MemoryPlane.of(pool)
+    plane.check_invariants()
+    return {
+        'sharing': sharing,
+        'steps_to_completion': steps,
+        'prefill_chunks': eng.stats.prefill_chunks,
+        'dispatches': eng.stats.dispatches,
+        'ttft_steps_mean': float(np.mean(list(ttft_steps.values()))),
+        'shared_pages_attached': plane.stats.shared_pages_attached,
+        'shared_tokens_saved': plane.stats.shared_tokens_saved,
+        'outputs': [eng.output_tokens(r) for r in rids],
+    }
+
+
+# ---------------------------------------------------------------------------
+# 2. NodeSim burst: recompute tax under the three memory-plane modes
+# ---------------------------------------------------------------------------
+
+def _sim_burst(mode: str, *, horizon_s: float, seed: int = 0) -> Dict:
+    from repro.core.sim.colocation import NodeSim, SimConfig
+    from repro.core.sim.strategies import Channel, OurMem
+    from repro.core.sim.workload import (OfflineWorkload, WorkloadPair,
+                                         make_online_trace)
+
+    flags = {
+        'valve': dict(partial=True, sharing=True),
+        'no-sharing': dict(partial=True, sharing=False),
+        'whole-invalidation': dict(partial=False, sharing=False),
+    }[mode]
+    # sized so an online burst reclaims a SLICE of the offline residency
+    # (tail handles of big shared-prefix requests), not the whole pool —
+    # the regime partial invalidation exists for; 16-page handles let one
+    # request span several handles so tail cuts leave long survivors
+    cfg = SimConfig(total_pages=2048)
+    online = make_online_trace(
+        name='bursty', horizon_s=horizon_s, base_rate=0.08, burst_rate=3.0,
+        burst_every_s=30.0, burst_len_s=6.0, prompt_mean=1024,
+        prompt_sigma=0.6, out_mean=48, seed=seed)
+    offline = OfflineWorkload('prefix-batch', prompt_tokens=1024,
+                              output_tokens=128, max_batch=24,
+                              shared_prefix_tokens=512)
+    pair = WorkloadPair('prefix-burst', online, offline)
+    mp = OurMem(cfg.total_pages, cfg.page_tokens, pages_per_handle=16,
+                **flags)
+    res = NodeSim(pair, Channel(), mp, cfg).run()
+    mp.plane.check_invariants()
+    tel = res.telemetry.counters
+    return {
+        'mode': mode,
+        'recompute_tokens': res.recompute_tokens,
+        'offline_tokens': res.offline_tokens,
+        'offline_throughput': res.offline_throughput,
+        'reclamations': tel.reclamations,
+        'preemptions': tel.preemptions,
+        'ttft_p50': float(np.median(list(res.ttft.values())))
+        if res.ttft else None,
+        'shared_tokens_saved': mp.plane.stats.shared_tokens_saved,
+        'tokens_preserved': mp.plane.stats.tokens_preserved,
+        'partial_invalidations': mp.plane.stats.partial_invalidations,
+        'invalidations': mp.plane.stats.invalidations,
+    }
+
+
+# ---------------------------------------------------------------------------
+
+def run(horizon_s: float = 240.0) -> Dict:
+    print('— engine drain: shared-prefix batch, sharing on vs off —')
+    off = _engine_drain(False)
+    on = _engine_drain(True)
+    assert on['outputs'] == off['outputs'], 'sharing changed greedy outputs'
+    assert on['shared_pages_attached'] > 0, 'no pages were ever shared'
+    assert on['prefill_chunks'] < off['prefill_chunks']
+    for r in (off, on):
+        print(f"  sharing={str(r['sharing']):5}  steps={r['steps_to_completion']:4d}  "
+              f"prefill_chunks={r['prefill_chunks']:3d}  "
+              f"ttft_steps={r['ttft_steps_mean']:.1f}  "
+              f"tokens_saved={r['shared_tokens_saved']:.0f}")
+
+    print('— NodeSim burst: recompute tax by memory-plane mode —')
+    sims = [_sim_burst(m, horizon_s=horizon_s)
+            for m in ('valve', 'no-sharing', 'whole-invalidation')]
+    base = next(s for s in sims if s['mode'] == 'whole-invalidation')
+    nosh = next(s for s in sims if s['mode'] == 'no-sharing')
+    valve = next(s for s in sims if s['mode'] == 'valve')
+    assert valve['recompute_tokens'] < base['recompute_tokens'], \
+        (valve['recompute_tokens'], base['recompute_tokens'])
+    for s in sims:
+        print(f"  {s['mode']:18}  recompute={s['recompute_tokens']:8.0f}  "
+              f"offline_tok={s['offline_tokens']:8.0f}  "
+              f"reclaims={s['reclamations']:3d}  "
+              f"preserved={s['tokens_preserved']:.0f}")
+    saved = 1.0 - valve['recompute_tokens'] / max(base['recompute_tokens'], 1e-9)
+    saved_partial = 1.0 - (nosh['recompute_tokens']
+                           / max(base['recompute_tokens'], 1e-9))
+    print(f"  → partial invalidation alone cuts the recompute tax by "
+          f"{saved_partial:.1%}; with prefix sharing the zero-ref cache "
+          f"absorbs the bursts ({saved:.1%} cut, offline tokens "
+          f"{valve['offline_tokens'] / max(base['offline_tokens'], 1e-9) - 1:+.1%})")
+
+    out = {
+        'engine_drain': {'sharing_off': {k: v for k, v in off.items()
+                                         if k != 'outputs'},
+                         'sharing_on': {k: v for k, v in on.items()
+                                        if k != 'outputs'},
+                         'outputs_identical': on['outputs'] == off['outputs']},
+        'nodesim_burst': {s['mode']: {k: v for k, v in s.items()
+                                      if k != 'mode'} for s in sims},
+        'recompute_tax_saved_vs_whole': saved,
+        'recompute_tax_saved_partial_only': saved_partial,
+    }
+    os.makedirs('results', exist_ok=True)
+    with open('results/prefix_reuse.json', 'w') as f:
+        json.dump(out, f, indent=2)
+    with open('BENCH_prefix.json', 'w') as f:
+        json.dump(out, f, indent=2)
+    print('wrote results/prefix_reuse.json and BENCH_prefix.json')
+    return out
+
+
+if __name__ == '__main__':
+    run()

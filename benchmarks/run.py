@@ -28,6 +28,7 @@ BENCHES = [
     ('roofline', 'supporting analysis — dry-run roofline table'),
     ('serve_throughput', 'serving plane — batched prefill vs seed + node demo'),
     ('api_overhead', 'control-plane API v1 — session/event hot-path cost'),
+    ('prefix_reuse', 'memory plane v1 — prefix sharing + partial-invalidation tax'),
 ]
 
 
@@ -58,6 +59,8 @@ def main():
                 mod.run(n_nodes=8, epoch_s=30.0, n_epochs=4)
             elif args.fast and name == 'api_overhead':
                 mod.run(horizon_s=60.0)
+            elif args.fast and name == 'prefix_reuse':
+                mod.run(horizon_s=120.0)
             else:
                 mod.run()
         except Exception:

@@ -29,12 +29,16 @@ import sys
 sys.path.insert(0, 'tests')
 from test_patch_surface import patch_loc, session_patch_loc
 loc, sloc = patch_loc(), session_patch_loc()
-print(f'framework-side patch: {loc} LOC (paper Table 1 contract: < 20)')
+print(f'framework-side patch: {loc} LOC (paper Table 1 contract: < 20; '
+      f'memory-plane v1 budget: <= 13)')
 print(f'session-API integration: {sloc} tagged lines (open/mint/admit/'
       f'finish/gate/notify)')
-assert 0 < loc < 20, loc
+assert 0 < loc <= 13, loc   # surviving-prefix resume must not bloat it
 assert 0 < sloc < 10, sloc
 PY
+
+echo "== memory-plane lease property smoke (fast gate) =="
+python -m pytest -q tests/test_memory.py
 
 echo "== control-plane API surface (pinned snapshot) =="
 python - <<'PY'

@@ -12,20 +12,29 @@ framework holds.
     session = runtime.open_session(klass='offline', name='batch-7b',
                                    on_invalidate=engine.on_pages_invalidated)
     rid = session.new_request_id()
-    pages = session.admit(rid, n_pages)     # lifecycle notify + alloc + route
+    lease = session.admit(rid, n_pages, prompt)  # notify + lease + route
     session.iteration_start(); ...; session.iteration_end()
     if session.may_dispatch(): ...
-    session.finish(rid)                     # free + route release + notify
+    session.finish(rid)                     # release lease + route + notify
 
 Because allocation goes *through* the session, the runtime always knows
 which session owns a request id: invalidation delivery routes by ownership
-(route lifetime == page lifetime, so no terminal path can leak a route
+(route lifetime == lease lifetime, so no terminal path can leak a route
 entry), same-class sessions cannot mis-route each other's callbacks, and
 request ids are minted under the session's unique name (no discriminator).
 
+**Memory-plane API v1** (``docs/API.md`` §memory): ``admit`` returns a
+:class:`~repro.core.memory.KVLease` — an opaque refcounted handle that
+owns page lifetime (``extend``/``fork``/``release``), shares page-aligned
+prompt prefixes copy-on-write (pass ``prompt=`` to opt in; the share scope
+is the session name, so different models never alias KV), and survives
+partial invalidation: re-admitting a live id *extends* the lease, keeping
+the surviving prefix, and ``lease.resume_tokens`` is where prefill
+resumes.  The lease iterates as the legacy page-id list.
+
 :class:`PoolSession` gives a bare :class:`~repro.serving.kvpool.KVPool`
-the same shape (no runtime, no gating, no events) so the engine holds one
-session unconditionally.
+the same shape (no runtime, no gating, no events — but the same
+pool-global memory plane) so the engine holds one session unconditionally.
 
 ``api_surface()`` renders the public control-plane API as stable text —
 ``tests/test_api_surface.py`` pins it against ``tests/api_surface.txt`` so
@@ -36,8 +45,9 @@ from __future__ import annotations
 
 import inspect
 import itertools
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
+from repro.core.memory import KVLease, MemoryPlane
 from repro.core.reclamation import InvalidationCallback
 
 __all__ = ['ValveSession', 'PoolSession', 'api_surface']
@@ -77,11 +87,19 @@ class ValveSession:
         return f'{self.name}-{next(self._ids)}'
 
     # -- memory plane -------------------------------------------------------
-    def alloc(self, req_id: str, n_pages: int) -> Optional[List[int]]:
-        """Allocate pages for ``req_id`` in this session's class; on
-        success the session becomes the request's invalidation route."""
+    def alloc(self, req_id: str, n_pages: int,
+              prompt: Optional[Sequence[int]] = None) -> Optional[KVLease]:
+        """Lease ``n_pages`` pages for ``req_id`` in this session's class;
+        on success the session becomes the request's invalidation route.
+
+        A live ``req_id`` (a partially-invalidated request re-admitting) is
+        *extended* to the target, keeping its surviving prefix.  With
+        ``prompt``, page-aligned prompt prefixes already materialized under
+        this session are attached copy-on-write instead of re-allocated —
+        ``lease.resume_tokens`` tells the engine where prefill starts."""
         assert not self.closed, f'session {self.name} is closed'
-        return self.runtime._session_alloc(self, req_id, n_pages)
+        return self.runtime._session_alloc(self, req_id, n_pages,
+                                           prompt=prompt)
 
     def free(self, req_id: str) -> None:
         """Release the request's pages and its invalidation route."""
@@ -105,16 +123,17 @@ class ValveSession:
             self.runtime.on_online_iteration_end()
 
     # -- bundles (what shrinks the framework patch) -------------------------
-    def admit(self, req_id: str, n_pages: int) -> Optional[List[int]]:
-        """Admission bundle: lifecycle start, then allocation; a failed
+    def admit(self, req_id: str, n_pages: int,
+              prompt: Optional[Sequence[int]] = None) -> Optional[KVLease]:
+        """Admission bundle: lifecycle start, then the lease; a failed
         allocation rolls the lifecycle notification back.  The start fires
         *before* the allocation so the request's arrival closes the gates
         before any reclamation it triggers (one preemption covers both)."""
         self.request_start(req_id)
-        pages = self.alloc(req_id, n_pages)
-        if pages is None:
+        lease = self.alloc(req_id, n_pages, prompt)
+        if lease is None:
             self.request_end(req_id)
-        return pages
+        return lease
 
     def finish(self, req_id: str) -> None:
         """Terminal bundle: free pages + release route + lifecycle end."""
@@ -150,7 +169,8 @@ class PoolSession:
 
     Standalone engines (tests, the serving-plane benchmark drain) keep the
     exact session call sites — lifecycle notifications and the gate check
-    degenerate to no-ops, allocation goes straight to the pool.
+    degenerate to no-ops; allocation goes through the pool's memory plane,
+    so leases, prefix sharing and partial invalidation behave identically.
     """
 
     runtime = None
@@ -158,6 +178,7 @@ class PoolSession:
     def __init__(self, pool, klass: str, name: Optional[str] = None):
         assert klass in ('online', 'offline'), klass
         self.pool = pool
+        self.plane = MemoryPlane.of(pool)
         self.klass = klass
         self.name = name or f'{klass}{next(_POOL_SESSION_SEQ)}'
         self._ids = itertools.count()
@@ -165,11 +186,13 @@ class PoolSession:
     def new_request_id(self) -> str:
         return f'{self.name}-{next(self._ids)}'
 
-    def alloc(self, req_id: str, n_pages: int) -> Optional[List[int]]:
-        return self.pool.alloc(req_id, n_pages, klass=self.klass)
+    def alloc(self, req_id: str, n_pages: int,
+              prompt: Optional[Sequence[int]] = None) -> Optional[KVLease]:
+        return self.plane.admit(req_id, n_pages, self.klass,
+                                prompt=prompt, scope=self.name)
 
     def free(self, req_id: str) -> None:
-        self.pool.free(req_id)
+        self.plane.release_id(req_id)
 
     def request_start(self, req_id: str) -> None: ...
     def request_end(self, req_id: str) -> None: ...
@@ -187,7 +210,7 @@ class PoolSession:
     def owned_requests(self) -> List[str]:
         # ids are minted as f'{name}-{n}': match the full name segment so
         # 'offline1' never claims 'offline10-...'
-        return [r for r in self.pool.pages_of
+        return [r for r in self.plane.leases
                 if r.startswith(self.name + '-')]
 
     def close(self) -> None: ...
@@ -214,16 +237,21 @@ def _surface_of(obj, prefix: str) -> List[str]:
 
 
 def api_surface() -> List[str]:
-    """Render the public control-plane API v1 as sorted signature lines."""
+    """Render the public control- and memory-plane API v1 as sorted
+    signature lines."""
     from repro.core import events as E
+    from repro.core import memory as M
     from repro.core import telemetry as T
     from repro.core.runtime import ValveRuntime
 
     lines: List[str] = []
-    for cls in (ValveSession, PoolSession, ValveRuntime, E.EventBus,
-                T.TelemetryRegistry, T.LatencySummary):
+    for cls in (ValveSession, PoolSession, ValveRuntime, M.MemoryPlane,
+                M.KVLease, E.EventBus, T.TelemetryRegistry,
+                T.LatencySummary):
         lines.append(f'{cls.__module__}.{cls.__name__}')
         lines += _surface_of(cls, f'  {cls.__name__}')
+    lines.append(f'{M.LeaseInvalidation.__module__}.LeaseInvalidation'
+                 f'({", ".join(M.LeaseInvalidation.__slots__)})')
     for ev in E.EVENT_TYPES:
         lines.append(f'{ev.__module__}.{ev.__name__}'
                      f'({", ".join(ev._fields)})')

@@ -118,6 +118,11 @@ def make_harvest_jobs(n_jobs: int, sim_cfg: SimConfig, *, seed: int = 0,
         OfflineWorkload('arch-mixed', prompt_tokens=512, output_tokens=256,
                         max_batch=48, prompt_choices=(256, 512, 1024),
                         output_choices=(128, 256)),
+        # HyGen-style dominant harvest shape: one system prompt shared by
+        # the whole batch — exercises the memory plane's prefix sharing
+        # and keeps the partial-invalidation surviving prefixes long
+        OfflineWorkload('arch-prefix', prompt_tokens=512, output_tokens=192,
+                        max_batch=48, shared_prefix_tokens=256),
     ]
     prof_cache: Dict[str, WorkloadProfile] = {}
     jobs: List[HarvestJob] = []

@@ -9,9 +9,18 @@ The reclamation path, in the paper's mandatory order:
    the lowest marginal token cost;
 3. **remap to quarantine** — every mapped page of a victim handle is remapped
    to page 0, which is always mapped, so by construction no access can fault;
-4. **surface invalidated IDs** — the per-request invalidated page ids are
+4. **surface invalidated IDs** — the per-request invalidation records are
    pushed through a single framework callback (the < 20-LOC patch surface);
-   the framework resets affected requests to *waiting* for recomputation.
+   since Memory-plane API v1 each record is a
+   :class:`~repro.core.memory.LeaseInvalidation` carrying the **surviving
+   prefix** (``keep``/``resume``), so the framework resumes
+   recompute *from the surviving prefix* instead of restarting at token 0.
+   Requests allocated around the plane degrade to the legacy whole-request
+   semantics (``keep == 0``).
+
+Victim selection runs Algorithm 1 over the plane's *marginal
+recompute-from-surviving-prefix* cost (``MemoryPlane.recompute_cost``) —
+unfilled tails and zero-ref cached prefixes are free to take.
 
 A :class:`ReclamationRateLimiter` tracks the reclamation-event rate that the
 MIAD reservation is driving toward the user target.
@@ -23,10 +32,12 @@ from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 from repro.core import eviction
+from repro.core.memory import MemoryPlane
 from repro.serving.kvpool import KVPool
 
 # type of the framework-side patch surface: called once per reclamation with
-# {offline request id: [invalidated page ids]}
+# {offline request id: LeaseInvalidation} — each value iterates as the
+# legacy invalidated-page-id list, so un-migrated callbacks keep working
 InvalidationCallback = Callable[[Dict[str, List[int]]], None]
 
 
@@ -92,6 +103,7 @@ class ReclamationController:
                  bus=None):
         assert policy in ('valve', 'fifo'), policy
         self.pool = pool
+        self.plane = MemoryPlane.of(pool)
         self.gate_is_closed = gate_is_closed
         self.on_invalidate = on_invalidate
         self.policy = policy
@@ -99,9 +111,10 @@ class ReclamationController:
         # reclamation publishes one ReclamationEvent before the framework
         # callback fires, so subscribers see the fact before the reaction
         self.bus = bus
-        # default COST(r): tokens already materialized = pages × page_size
-        self.cost_of = cost_of or (
-            lambda r: len(pool.pages_of.get(r, ())) * pool.page_size)
+        # COST(r): by default the plane's marginal recompute-from-surviving-
+        # prefix tokens; a custom ``cost_of`` opts back into the classic
+        # whole-request cost model of paper Algorithm 1
+        self.cost_of = cost_of
         self.rate = ReclamationRateLimiter(rate_window_s)
         self.stats = ReclamationStats()
         self._handle_age: Dict[int, float] = {}
@@ -112,8 +125,11 @@ class ReclamationController:
         if self.policy == 'fifo':
             by_age = sorted(cand, key=lambda h: self._handle_age.get(h, 0.0))
             return eviction.select_handles_fifo(k, by_age)
-        return eviction.select_handles(
-            k, cand, self.pool.reqs_of_handle, self.cost_of)
+        if self.cost_of is not None:
+            return eviction.select_handles(
+                k, cand, self.pool.reqs_of_handle, self.cost_of)
+        return eviction.select_handles_partial(
+            k, cand, self.plane.impact_of, self.plane.recompute_cost)
 
     def note_handle_use(self, h: int, now: float) -> None:
         """FIFO baseline bookkeeping: first-touch age per handle."""
@@ -123,8 +139,9 @@ class ReclamationController:
     def reclaim(self, n_handles: int, now: float) -> Dict[str, List[int]]:
         """Reclaim ``n_handles`` offline handles for online use.
 
-        Returns the invalidation map {offline req: [page ids]} (also pushed
-        through ``on_invalidate``).  Caller must hold the compute gate closed.
+        Returns the invalidation map {offline req: LeaseInvalidation} (also
+        pushed through ``on_invalidate``).  Caller must hold the compute
+        gate closed.
         """
         if not self.gate_is_closed():
             self.stats.ordering_violations += 1
@@ -132,16 +149,21 @@ class ReclamationController:
                 'reclamation attempted with offline compute enabled '
                 '(paper §5: disable offline compute first)')
         victims = self.select_victims(n_handles)
-        invalidated = self.pool.reclaim_handles(victims, now)
+        invalidated = self.plane.reclaim_handles(victims, now)
         for h in victims:
             self._handle_age.pop(h, None)
 
         self.stats.reclamations += 1
         self.stats.handles_reclaimed += len(victims)
-        self.stats.pages_invalidated += sum(len(v) for v in invalidated.values())
+        # PHYSICAL pages: a shared prefix page appears in every using
+        # lease's record — count each page id once
+        n_pages = len({p for v in invalidated.values() for p in v})
+        self.stats.pages_invalidated += n_pages
         self.stats.requests_impacted += len(invalidated)
-        self.stats.tokens_lost += sum(
-            len(v) * self.pool.page_size for v in invalidated.values())
+        # recompute tax actually inflicted: fill lost beyond the surviving
+        # prefix (legacy ids report their remapped pages, as before)
+        self.stats.tokens_lost += sum(v.lost_tokens
+                                      for v in invalidated.values())
         self.rate.note(now)
 
         if self.bus is not None:
@@ -149,7 +171,7 @@ class ReclamationController:
             self.bus.publish(
                 ReclamationEvent, n_handles=len(victims),
                 requests=tuple(sorted(invalidated)),
-                pages=sum(len(v) for v in invalidated.values()),
+                pages=n_pages,
                 gate_closed=True)
 
         if self.on_invalidate is not None and invalidated:

@@ -20,10 +20,14 @@ through :meth:`subscribe` (the typed event stream of
 the hot path publishes facts, never hand-syncs counters, and
 :meth:`check_invariants` checks the event log.
 
-The klass-string methods (``alloc_online``/``alloc_offline``/``free_*``) and
+**Memory-plane API v1** (``repro.core.memory``): allocation goes through
+``runtime.memory`` — sessions return :class:`~repro.core.memory.KVLease`
+handles (refcounted, prefix-sharing, partially invalidatable), and the
+invalidation callback carries per-request surviving prefixes.  The
+klass-string methods (``alloc_online``/``alloc_offline``/``free_*``) and
 the per-request invalidation route table (``bind_invalidation``/
 ``unbind_invalidation``) are **deprecated shims** over hidden legacy
-sessions; new integrations should hold a session.
+sessions/leases; new integrations should hold a session.
 
 The runtime is clock-agnostic: a :class:`RealClock` drives the live demo and
 a :class:`VirtualClock` drives the discrete-event simulator, so the paper's
@@ -42,6 +46,7 @@ from repro.core.events import (
     RuntimeEvent, WakeupEvent)
 from repro.core.gate import DeviceGate, GateGroup
 from repro.core.lifecycle import OnlineLifecycleTracker
+from repro.core.memory import KVLease, MemoryPlane
 from repro.core.miad import MIADConfig, MIADReservation
 from repro.core.reclamation import InvalidationCallback, ReclamationController
 from repro.core.telemetry import TelemetryRegistry
@@ -86,6 +91,12 @@ class ValveRuntime:
         self.cfg = cfg or RuntimeConfig()
         self.clock = clock or RealClock()
         self.pool = pool
+        # -- memory plane: lease-based allocation over the physical pool --
+        self.memory = MemoryPlane.of(pool)
+        # route lifetime == lease lifetime: whenever a lease fully dies
+        # (finish, close, zero-survivor invalidation, spill) its delivery
+        # route dies with it — one mechanism for every terminal path
+        self.memory.on_release = self._lease_released
         # -- control plane: event stream + derived telemetry ------------
         self.bus = EventBus(self.clock, log_maxlen=self.cfg.event_log_maxlen)
         self.lifecycle = OnlineLifecycleTracker(
@@ -152,18 +163,23 @@ class ValveRuntime:
         return sorted(set(self._owner) | set(self._invalidation_route))
 
     # -- session internals (called by ValveSession) ---------------------
-    def _session_alloc(self, sess, req_id: str, n_pages: int
-                       ) -> Optional[List[int]]:
+    def _session_alloc(self, sess, req_id: str, n_pages: int,
+                       prompt=None) -> Optional[KVLease]:
         if sess.klass == 'online':
-            got = self._alloc_online(req_id, n_pages)
+            got = self._alloc_online(req_id, n_pages, prompt=prompt,
+                                     scope=sess.name)
         else:
-            got = self._alloc_offline(req_id, n_pages)
+            got = self._alloc_offline(req_id, n_pages, prompt=prompt,
+                                      scope=sess.name)
         if got is not None:
             self._owner[req_id] = sess
         return got
 
     def _session_free(self, sess, req_id: str) -> None:
-        self.pool.free(req_id)
+        self.memory.release_id(req_id)
+        self._owner.pop(req_id, None)
+
+    def _lease_released(self, req_id: str) -> None:
         self._owner.pop(req_id, None)
 
     def _session_owned(self, sess) -> List[str]:
@@ -213,11 +229,16 @@ class ValveRuntime:
             cb(group)
         if unrouted and self._invalidation_fallback is not None:
             self._invalidation_fallback(unrouted)
-        # route lifetime == page lifetime: the pool freed these requests
-        # during reclamation, so their routes die with them (re-admission
-        # re-allocates and re-routes through the owning session)
-        for rid in invalidated:
-            self._owner.pop(rid, None)
+        # route lifetime == lease lifetime.  This pop is LOAD-BEARING for
+        # every released lease: the invalidation path releases with
+        # notify=False (the delivery above must still find the route), so
+        # the plane's on_release hook deliberately did NOT fire — routes
+        # for zero-survivor leases and legacy whole-freed ids drop here,
+        # after delivery.  A request with a SURVIVING prefix keeps lease
+        # and route: the next invalidation must still reach its session.
+        for rid, inv in invalidated.items():
+            if getattr(inv, 'released', True):
+                self._owner.pop(rid, None)
 
     # ------------------------------------------------------------------
     # Online engine hooks (sessions call these; total patch surface on the
@@ -251,38 +272,47 @@ class ValveRuntime:
     # Memory plane (session-internal; the klass-string methods below are
     # deprecated shims over hidden legacy sessions)
     # ------------------------------------------------------------------
-    def _alloc_online(self, req_id: str, n_pages: int) -> Optional[List[int]]:
-        """Allocate online KV pages from the MIAD reservation; on shortfall,
+    def _alloc_online(self, req_id: str, n_pages: int, *, prompt=None,
+                      scope=None) -> Optional[KVLease]:
+        """Lease online KV pages from the MIAD reservation; on shortfall,
         reclaim offline handles (compute-first) to cover it."""
-        got = self.pool.alloc(req_id, n_pages, klass='online')
+        got = self.memory.admit(req_id, n_pages, 'online',
+                                prompt=prompt, scope=scope)
         if got is not None:
             return got
         now = self.clock.now()
-        deficit = n_pages - self.pool.free_pages_for('online')
+        held = self.memory.get(req_id)
+        missing = n_pages - (len(held) if held is not None else 0)
+        deficit = missing - self.pool.free_pages_for('online')
         self.bus.publish(MemoryPressureEvent, req_id=req_id,
                          deficit_pages=deficit)
         n_handles = -(-deficit // self.pool.pph)  # ceil
         self._with_gates_closed_reclaim(n_handles, now)
-        return self.pool.alloc(req_id, n_pages, klass='online')
+        return self.memory.admit(req_id, n_pages, 'online',
+                                 prompt=prompt, scope=scope)
 
-    def _alloc_offline(self, req_id: str, n_pages: int) -> Optional[List[int]]:
-        got = self.pool.alloc(req_id, n_pages, klass='offline')
+    def _alloc_offline(self, req_id: str, n_pages: int, *, prompt=None,
+                       scope=None) -> Optional[KVLease]:
+        got = self.memory.admit(req_id, n_pages, 'offline',
+                                prompt=prompt, scope=scope)
         if got is not None:
             now = self.clock.now()
             for p in got:
                 self.reclaimer.note_handle_use(self.pool.handle_of(p), now)
         return got
 
-    def alloc_online(self, req_id: str, n_pages: int) -> Optional[List[int]]:
-        """DEPRECATED — use ``open_session('online').alloc`` instead."""
+    def alloc_online(self, req_id: str, n_pages: int) -> Optional[KVLease]:
+        """DEPRECATED — use ``open_session('online').alloc`` instead.
+        Returns the hidden lease (list-like: iterates as the page ids)."""
         return self._legacy_session('online').alloc(req_id, n_pages)
 
     def free_online(self, req_id: str) -> None:
         """DEPRECATED — use the owning session's ``free``/``finish``."""
         self._legacy_session('online').free(req_id)
 
-    def alloc_offline(self, req_id: str, n_pages: int) -> Optional[List[int]]:
-        """DEPRECATED — use ``open_session('offline').alloc`` instead."""
+    def alloc_offline(self, req_id: str, n_pages: int) -> Optional[KVLease]:
+        """DEPRECATED — use ``open_session('offline').alloc`` instead.
+        Returns the hidden lease (list-like: iterates as the page ids)."""
         return self._legacy_session('offline').alloc(req_id, n_pages)
 
     def free_offline(self, req_id: str) -> None:
@@ -359,7 +389,7 @@ class ValveRuntime:
         source every counter derives from) rather than hand-synced fields:
         ≤ 1 preemption per online request, wake-ups == gate enables, §5
         compute-first ordering, T_cool wake rule."""
-        self.pool.check_invariants()
+        self.memory.check_invariants()        # includes pool invariants
         assert self.reclaimer.stats.ordering_violations == 0
         self.telemetry.check_invariants(gates=self.gates)
         # the legacy mirrors must agree with the event-derived counters

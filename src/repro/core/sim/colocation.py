@@ -69,6 +69,8 @@ class OfflineReq:
     out_remaining: int
     pages: int
     generated: int = 0
+    filled: int = 0                  # KV materialized (mirrors the lease)
+    blocked: int = 0                 # consecutive failed re-allocations
 
     def __post_init__(self):
         self.prompt0 = self.prefill_tokens   # original prompt length
@@ -144,6 +146,11 @@ class NodeSim:
         self._off_ids = itertools.count()
         self.off_pending: List[OfflineReq] = []   # needs (re)prefill
         self.off_running: List[OfflineReq] = []   # decoding
+        # shared system prompt (HyGen-style): every offline request passes
+        # the same synthetic token prefix to lease-capable memory policies,
+        # which attach the published pages instead of re-prefilling them
+        n_shared = pair.offline.shared_prefix_tokens
+        self._prefix_base = list(range(n_shared)) if n_shared > 0 else None
         self.off_busy_until = 0.0
         self.off_inflight: Optional[Tuple[str, float, List[OfflineReq]]] = None
         # ('prefill'|'decode', started_at, targets)
@@ -168,6 +175,21 @@ class NodeSim:
     def _off_pages_needed(self, prompt: int, out: int) -> int:
         return -(-(prompt + out) // self.cfg.page_tokens)
 
+    def _off_prefix(self, prompt: int) -> Optional[List[int]]:
+        """The shared system prompt clamped below this request's prompt
+        length (≥1 token always remains to prefill)."""
+        if self._prefix_base is None:
+            return None
+        return self._prefix_base[: max(0, prompt - 1)]
+
+    def _off_resync(self, r: OfflineReq) -> None:
+        """Align a request's prefill need with its lease's valid-KV prefix
+        (shared attach on admission, surviving prefix after re-extension)."""
+        resume = self.mp.resume_tokens(r.rid)
+        if resume > r.filled:
+            r.prefill_tokens = max(1, (r.prompt0 + r.generated) - resume)
+            r.filled = resume
+
     def _off_admit(self) -> None:
         """Top up in-flight offline requests while memory allows."""
         w = self.pair.offline
@@ -175,9 +197,12 @@ class NodeSim:
             rid = f'off-{next(self._off_ids)}'
             prompt, out = self._off_sizes()
             pages = self._off_pages_needed(prompt, out)
-            if not self.mp.alloc_offline(rid, pages, self.now):
+            if not self.mp.alloc_offline(rid, pages, self.now,
+                                         self._off_prefix(prompt)):
                 break
-            self.off_pending.append(OfflineReq(rid, prompt, out, pages))
+            r = OfflineReq(rid, prompt, out, pages)
+            self._off_resync(r)      # shared prefix: skip its prefill
+            self.off_pending.append(r)
 
     def _off_invalidate(self, res: AllocResult) -> None:
         """Apply a memory policy's invalidations/kills to the offline engine."""
@@ -196,15 +221,21 @@ class NodeSim:
                 self.result.offline_tokens_wasted += r.generated
                 self.mp.free_offline(rid)
             else:
-                # Valve: tokens kept; recompute prompt+generated, then resume
-                self.result.recompute_tokens += r.prefill_tokens + r.generated
-                r.prefill_tokens = r.prompt0 + r.generated
-                self.mp.free_offline(rid)
-                # re-queue with pages released; re-allocation happens lazily
-                # at the next offline dispatch (an immediate re-grab would
-                # steal the pages the online burst is reclaiming FOR and
-                # thrash the reclaimer)
-                r.pages = 0
+                # Valve: tokens kept; recompute only what was materialized
+                # BEYOND the surviving prefix, then resume.  Whole-request
+                # policies report no survivors → full restart as before.
+                surv = res.surviving.get(rid, 0)
+                self.result.recompute_tokens += max(0, r.filled - surv)
+                r.prefill_tokens = max(
+                    1, (r.prompt0 + r.generated) - surv)
+                r.filled = min(r.filled, surv)
+                # surviving pages stay leased; the lost tail re-extends
+                # lazily at the next offline dispatch (an immediate re-grab
+                # would steal the pages the online burst is reclaiming FOR
+                # and thrash the reclaimer)
+                r.pages = self.mp.held_pages(rid)
+                if r.pages == 0:
+                    self.mp.free_offline(rid)
                 self.off_pending.insert(0, r)
         # drop in-flight dispatch targets that vanished
         if self.off_inflight is not None:
@@ -231,12 +262,28 @@ class NodeSim:
         if not self.offline_enabled:
             return False
         self._off_admit()
-        # re-alloc pages for recompute victims that failed earlier
+        # re-extend recompute victims to their full page need (surviving
+        # leases keep their prefix; dead ones re-admit, possibly attaching
+        # a shared prefix again)
         for r in self.off_pending:
-            if r.pages == 0:
-                if self.mp.alloc_offline(r.rid, r.pages0, self.now):
-                    r.pages = r.pages0
-        ready_pending = [r for r in self.off_pending if r.pages > 0]
+            if r.pages >= r.pages0:
+                continue
+            if self.mp.alloc_offline(r.rid, r.pages0, self.now,
+                                     self._off_prefix(r.prompt0)):
+                r.pages, r.blocked = r.pages0, 0
+                self._off_resync(r)
+            else:
+                # sustained pressure: surviving prefixes held by blocked
+                # victims must not starve re-admission — spill our own
+                # survivors and fall back to whole-request recompute
+                r.blocked += 1
+                if r.blocked >= 3 and r.pages > 0:
+                    # the forfeited surviving prefix is recompute work too
+                    self.result.recompute_tokens += r.filled
+                    self.mp.free_offline(r.rid)
+                    r.pages, r.filled, r.blocked = 0, 0, 0
+                    r.prefill_tokens = r.prompt0 + r.generated
+        ready_pending = [r for r in self.off_pending if r.pages >= r.pages0]
         if ready_pending:
             r = ready_pending[0]
             dur = r.prefill_tokens * self.cfg.t_prefill_per_token
@@ -262,12 +309,18 @@ class NodeSim:
             if r in self.off_pending:
                 self.off_pending.remove(r)
                 self.off_running.append(r)
+                # the whole context is materialized now — the lease's fill
+                # fact drives prefix publication and surviving prefixes
+                r.filled = r.prompt0 + r.generated
+                self.mp.note_filled(r.rid, r.filled)
         else:
             for r in targets:
                 if r not in self.off_running:
                     continue
                 r.generated += 1
                 r.out_remaining -= 1
+                r.filled = r.prompt0 + r.generated
+                self.mp.note_filled(r.rid, r.filled)
                 self.result.offline_tokens += 1
                 if r.out_remaining <= 0:
                     self.off_running.remove(r)
@@ -374,11 +427,20 @@ class NodeSim:
                 self.bus.publish(MemoryPressureEvent, t=self.now,
                                  req_id=st.req.req_id,
                                  deficit_pages=res.deficit_pages)
+                # physical pages: with leases a shared prefix page appears
+                # in every using lease's record — count each page id once.
+                # Whole-request policies use SYMBOLIC per-request ids
+                # (range(n) each), where a set union would undercount.
+                if self.mp.supports_leases:
+                    n_pages = len({p for v in res.invalidated.values()
+                                   for p in v})
+                else:
+                    n_pages = sum(len(v) for v in res.invalidated.values())
                 self.bus.publish(
                     ReclamationEvent, t=self.now,
                     n_handles=res.reclaimed_handles,
                     requests=tuple(sorted(set(res.invalidated) | res.killed)),
-                    pages=sum(len(v) for v in res.invalidated.values()),
+                    pages=n_pages,
                     gate_closed=res.gate_closed, killed=bool(res.killed))
             self._off_invalidate(res)
             if not res.ok:

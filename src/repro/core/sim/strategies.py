@@ -34,6 +34,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.lifecycle import OnlineLifecycleTracker
+from repro.core.memory import MemoryPlane
 from repro.core.miad import MIADConfig, MIADReservation
 from repro.core.reclamation import ReclamationController
 from repro.serving.kvpool import KVPool
@@ -147,6 +148,10 @@ class AllocResult:
     # the offline engine's recompute queue)
     invalidated: Dict[str, List[int]] = field(default_factory=dict)
     killed: Set[str] = field(default_factory=set)
+    # rid → surviving-prefix tokens (memory-plane partial invalidation:
+    # the victim resumes prefill here instead of token 0; absent/0 for
+    # whole-request policies)
+    surviving: Dict[str, int] = field(default_factory=dict)
     # -- reclamation facts (the sim publishes these as typed events, so all
     # consumers observe the same stream the live runtime emits) --
     reclaimed: bool = False          # a reclamation/eviction pass ran
@@ -159,6 +164,9 @@ class AllocResult:
 class MemoryPolicy:
     """Page accounting over a shared pool of ``total_pages``."""
     name = 'base'
+    # True when the policy runs the memory plane: leases with prefix
+    # sharing, fill tracking and surviving-prefix (partial) invalidation
+    supports_leases = False
 
     def __init__(self, total_pages: int, page_tokens: int = 16):
         self.total = total_pages
@@ -186,7 +194,10 @@ class MemoryPolicy:
     def free_online(self, rid: str) -> None:
         self.online_pages.pop(rid, None)
 
-    def alloc_offline(self, rid: str, pages: int, now: float) -> bool:
+    def alloc_offline(self, rid: str, pages: int, now: float,
+                      prefix=None) -> bool:
+        """``prefix`` (token ids shared across a batch) is consumed only by
+        lease-capable policies; whole-request policies ignore it."""
         if pages <= self.offline_headroom(now):
             self.offline_pages[rid] = self.offline_pages.get(rid, 0) + pages
             return True
@@ -194,6 +205,17 @@ class MemoryPolicy:
 
     def free_offline(self, rid: str) -> None:
         self.offline_pages.pop(rid, None)
+
+    # -- lease hooks (no-ops without a memory plane) ------------------------
+    def note_filled(self, rid: str, tokens: int) -> None: ...
+
+    def resume_tokens(self, rid: str) -> int:
+        """Valid-KV prefix of ``rid`` (shared/surviving): prefill starts
+        here.  0 for whole-request policies."""
+        return 0
+
+    def held_pages(self, rid: str) -> int:
+        return self.offline_pages.get(rid, 0)
 
     def tick(self, now: float) -> None: ...
 
@@ -289,24 +311,41 @@ class StaticMem(MemoryPolicy):
 
 
 class OurMem(MemoryPolicy):
-    """Valve §5 on the real pool: sub-layer reclamation + MIAD reservation +
-    selective (Algorithm 1) or FIFO victim selection."""
+    """Valve §5 on the real pool + memory plane: sub-layer reclamation,
+    MIAD reservation, selective (Algorithm 1) or FIFO victim selection —
+    with lease-based allocation, so offline victims keep their surviving
+    prefix (partial invalidation) and shared-prefix batches attach
+    already-materialized prompt pages.
+
+    ``partial=False`` / ``sharing=False`` turn the plane features off
+    (whole-request invalidation, no prefix index) — the benchmark baseline
+    for the recompute-tax comparison.
+    """
     name = 'OurMem'
+    supports_leases = True
     RECLAIM_LATENCY = 1.0e-3       # disable-first + remap + callback
 
     def __init__(self, total_pages: int, page_tokens: int = 16,
                  pages_per_handle: int = 64, policy: str = 'valve',
-                 miad: Optional[MIADConfig] = None):
+                 miad: Optional[MIADConfig] = None, *,
+                 partial: bool = True, sharing: bool = True):
         super().__init__(total_pages, page_tokens)
         n_handles = max(total_pages // pages_per_handle, 1)
         self.pool = KVPool(n_handles, pages_per_handle,
                            page_size=page_tokens, reserved_handles=1)
+        self.plane = MemoryPlane(self.pool, sharing=sharing, partial=partial)
         self.miad = MIADReservation(h_init=1, cfg=miad or MIADConfig(
             t_init=0.5, target_rate=0.2, h_max=n_handles))
         self._gate_closed = False
+        # partial=False is the pre-plane baseline end to end: whole-request
+        # invalidation AND the old COST(r) = allocated tokens (the plane's
+        # filled-aware marginal cost would already dodge unfilled victims,
+        # which is part of what the comparison measures)
+        legacy_cost = None if partial else (
+            lambda r: len(self.pool.pages_of.get(r, ())) * page_tokens)
         self.reclaimer = ReclamationController(
             self.pool, gate_is_closed=lambda: self._gate_closed,
-            policy=policy)
+            policy=policy, cost_of=legacy_cost)
 
     def free_pages(self):                   # pool is the source of truth
         return (self.pool.free_pages_for('online')
@@ -316,7 +355,7 @@ class OurMem(MemoryPolicy):
         return self.pool.free_pages_for('offline')
 
     def alloc_online(self, rid, pages, now):
-        got = self.pool.alloc(rid, pages, klass='online')
+        got = self.plane.admit(rid, pages, 'online')
         r = AllocResult(ok=got is not None)
         if got is None:
             deficit = pages - self.pool.free_pages_for('online')
@@ -328,6 +367,7 @@ class OurMem(MemoryPolicy):
                 self._gate_closed = False
             self.miad.note_reclamation(now)
             r.invalidated = inv             # surfaced, NOT killed: recompute
+            r.surviving = {k: v.resume for k, v in inv.items()}
             r.delay = self.RECLAIM_LATENCY
             r.reclaimed, r.gate_closed = True, True
             r.reclaimed_handles = n_handles
@@ -335,7 +375,7 @@ class OurMem(MemoryPolicy):
             self.stats.reclamations += 1
             self.stats.online_stall_total += r.delay
             self.stats.stall_events += 1
-            got = self.pool.alloc(rid, pages, klass='online')
+            got = self.plane.admit(rid, pages, 'online')
             r.ok = got is not None
         if r.ok:
             self.online_pages[rid] = self.online_pages.get(rid, 0) + pages
@@ -343,20 +383,37 @@ class OurMem(MemoryPolicy):
 
     def free_online(self, rid):
         super().free_online(rid)
-        self.pool.free(rid)
+        self.plane.release_id(rid)
 
-    def alloc_offline(self, rid, pages, now):
-        got = self.pool.alloc(rid, pages, klass='offline')
-        if got is None:
+    def alloc_offline(self, rid, pages, now, prefix=None):
+        """Ensure ``rid`` holds ``pages`` pages: fresh admissions attach
+        any published shared ``prefix``; a surviving lease (partial
+        invalidation victim) is *extended*, keeping its prefix."""
+        lease = self.plane.admit(rid, pages, 'offline',
+                                 prompt=prefix, scope='sim')
+        if lease is None:
             return False
-        for p in got:
+        for p in lease:
             self.reclaimer.note_handle_use(self.pool.handle_of(p), now)
-        self.offline_pages[rid] = self.offline_pages.get(rid, 0) + pages
+        self.offline_pages[rid] = len(lease)
         return True
 
     def free_offline(self, rid):
         super().free_offline(rid)
-        self.pool.free(rid)
+        self.plane.release_id(rid)
+
+    def note_filled(self, rid, tokens):
+        lease = self.plane.get(rid)
+        if lease is not None:
+            lease.note_filled(tokens)
+
+    def resume_tokens(self, rid):
+        lease = self.plane.get(rid)
+        return lease.resume_tokens if lease is not None else 0
+
+    def held_pages(self, rid):
+        lease = self.plane.get(rid)
+        return len(lease) if lease is not None else 0
 
     def tick(self, now):
         h = self.miad.on_tick(now, self.pool.online_used_handles())

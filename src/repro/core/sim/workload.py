@@ -37,6 +37,12 @@ class OfflineWorkload:
 
     ``prompt_choices``/``output_choices``: per-request size mixes — varied
     sizes fragment the handle space (the condition Algorithm 1 exploits).
+
+    ``shared_prefix_tokens``: every request's prompt starts with the same
+    ``shared_prefix_tokens``-token system prompt (the HyGen-style dominant
+    harvest workload).  Lease-capable memory policies attach the published
+    prefix pages copy-on-write instead of re-prefilling them; whole-request
+    policies just see the prompt length.
     """
     name: str
     prompt_tokens: int = 512        # per request (mean when mixed)
@@ -44,6 +50,7 @@ class OfflineWorkload:
     max_batch: int = 48             # requests in flight if memory allows
     prompt_choices: tuple = ()
     output_choices: tuple = ()
+    shared_prefix_tokens: int = 0
     seed: int = 0
 
 

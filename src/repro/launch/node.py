@@ -197,8 +197,12 @@ class NodeOrchestrator:
             'max_preemptions_per_request':
                 tel['max_preemptions_per_request'],
             'preemption_latency': tel['preemption_latency'],
-            'live_online_requests': len(self.pool.request_ids('online')),
-            'live_offline_requests': len(self.pool.request_ids('offline')),
+            # live requests are LEASES now (raw pool owner ids include the
+            # memory plane's internal shared-prefix blocks)
+            'live_online_requests':
+                len(self.runtime.memory.live_leases('online')),
+            'live_offline_requests':
+                len(self.runtime.memory.live_leases('offline')),
             'engines': {
                 name: {
                     'arch': eng.mcfg.name,
@@ -207,9 +211,11 @@ class NodeOrchestrator:
                     'tokens': eng.stats.tokens_generated,
                     'dispatches': eng.stats.dispatches,
                     'mixed_dispatches': eng.stats.mixed_dispatches,
+                    # leased pages incl. attached shared-prefix pages
+                    # (pool ownership alone would miss attachments)
                     'live_pages': sum(
-                        len(self.pool.pages_of_request(r.req_id))
-                        for r in eng.requests.values()),
+                        len(r.lease) for r in eng.requests.values()
+                        if r.lease is not None and not r.lease.released),
                 } for name, eng in self.names.items()
             },
         }

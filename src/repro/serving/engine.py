@@ -11,10 +11,20 @@ Valve integration points (and *only* these — Table 1's deployability claim):
 the engine holds ONE class-scoped :class:`~repro.core.api.ValveSession`
 (``runtime.open_session``), whose calls — admit/finish bundles, iteration
 notifications, the gate check — are tagged ``# VALVE-SESSION`` and counted
-by ``tests/test_patch_surface.py`` alongside the < 20-LOC invalidation
+by ``tests/test_patch_surface.py`` alongside the ≤ 13-LOC invalidation
 patch (:meth:`Engine.on_pages_invalidated`).  The session owns invalidation
 routing by allocation ownership, so there is no per-request bind/unbind
 and no engine-instance id discriminator anymore.
+
+Memory-plane API v1: ``session.admit`` returns a
+:class:`~repro.core.memory.KVLease` (list-compatible with the old page
+list).  The engine passes each request's prompt so page-aligned shared
+prefixes attach copy-on-write (prefill skips them — the scheduler reads
+``lease.resume_tokens``), reports fill progress via ``lease.note_filled``
+(which publishes prefix pages for later admissions), and the invalidation
+patch resumes recompute from the surviving prefix the
+:class:`~repro.core.memory.LeaseInvalidation` carries instead of
+restarting at token 0.
 """
 from __future__ import annotations
 
@@ -76,6 +86,7 @@ class EngineStats:
     tokens_recomputed: int = 0
     invalidations: int = 0
     blocked_dispatches: int = 0     # offline dispatches skipped while gated
+    spills: int = 0                 # surviving prefixes dropped under pressure
 
 
 class Engine:
@@ -171,22 +182,22 @@ class Engine:
     # ------------------------------------------------------------------
     # >>> VALVE-PATCH-BEGIN
     def on_pages_invalidated(self, invalidated: Dict[str, List[int]]) -> None:
-        for rid in invalidated:
-            req = self.requests.get(rid)
-            # skip finished and already-queued ids (a queued request holds no
-            # pages, so its id here can only be a duplicate delivery)
-            if req is None or req.state == ReqState.FINISHED \
-                    or rid in self.queue:
+        for rid, inv in invalidated.items():
+            # session routing delivers only ids holding a live lease, so
+            # the request exists and is not FINISHED
+            req = self.requests[rid]
+            # recompute charge: a queued victim hit again loses only the
+            # shrink from its old resume point (0 for duplicate deliveries)
+            base = req.n_prefilled if rid in self.queue else len(req.context)
+            self.stats.tokens_recomputed += base - inv.resume
+            # keep the surviving prefix: prefill resumes at inv.resume
+            req.pages, req.n_prefilled = req.pages[:inv.keep], inv.resume
+            if rid in self.queue:
                 continue
-            # session routing delivers only page-holding (admitted) ids,
-            # so the request is in ``running`` by construction
-            req.pages, req.n_prefilled = [], 0
-            req.recomputes += 1
-            req.state = ReqState.WAITING
+            req.state, req.recomputes = ReqState.WAITING, req.recomputes + 1
             self.running.remove(rid)
             self.queue.insert(0, rid)
             self.stats.invalidations += 1
-            self.stats.tokens_recomputed += len(req.context)
     # >>> VALVE-PATCH-END
 
     # ------------------------------------------------------------------
@@ -205,17 +216,40 @@ class Engine:
 
     def _try_admit(self, req: Request) -> Optional[List[int]]:
         """Admission callback for the scheduler.  The session bundles the
-        lifecycle notification with the allocation — lifecycle first, so
-        the request's arrival closes the gates BEFORE any allocation can
-        trigger reclamation (one preemption covers both)."""
+        lifecycle notification with the lease — lifecycle first, so the
+        request's arrival closes the gates BEFORE any allocation can
+        trigger reclamation (one preemption covers both).  Passing the
+        prompt opts into copy-on-write prefix sharing: an already-
+        materialized page-aligned prefix is attached instead of recomputed
+        (``lease.resume_tokens`` tells the scheduler where prefill starts);
+        re-admitting a partially-invalidated request extends its live lease
+        and keeps the surviving prefix."""
         need = -(-req.target_len // self.pg)
-        return self.session.admit(req.req_id, need)         # VALVE-SESSION
+        lease = self.session.admit(                         # VALVE-SESSION
+            req.req_id, need, req.prompt)
+        if lease is not None:
+            # None must NOT clobber req.lease: a failed RE-admission leaves
+            # the surviving lease live in the plane, and _spill needs the
+            # handle to actually release it
+            req.lease = lease
+        return lease
+
+    def _spill(self, req: Request) -> None:
+        """Scheduler deadlock valve: drop a waiting request's surviving-
+        prefix pages under sustained admission pressure (degrades to the
+        legacy whole-request recompute)."""
+        if req.lease is not None:
+            req.lease.release()
+        # the forfeited surviving prefix becomes recompute work
+        self.stats.tokens_recomputed += req.n_prefilled
+        req.pages, req.n_prefilled, req.lease = [], 0, None
+        self.stats.spills += 1
 
     def _finish(self, req: Request) -> None:
         req.state = ReqState.FINISHED
         self.running.remove(req.req_id)
         self.session.finish(req.req_id)                     # VALVE-SESSION
-        req.pages = []
+        req.pages, req.lease = [], None
 
     # -- mixed prefill(+decode) dispatch -------------------------------------
     def _dispatch_mixed(self, batch: ScheduledBatch) -> None:
@@ -280,6 +314,8 @@ class Engine:
         for ps in batch.prefill:
             req = self.requests[ps.req_id]
             req.n_prefilled = ps.start + ps.length
+            if req.lease is not None:   # fill fact → prefix publication
+                req.lease.note_filled(req.n_prefilled)
             if req.n_prefilled == len(req.context):
                 req.state = ReqState.RUNNING
                 # the final chunk's logits predict the token after the
@@ -328,6 +364,9 @@ class Engine:
 
     def _append_token(self, req: Request, tok: int) -> None:
         req.generated.append(tok)
+        if req.lease is not None:
+            # KV is materialized for every context token but the new one
+            req.lease.note_filled(len(req.context) - 1)
         now = self.clock.now()
         if req.t_first_token is None:
             req.t_first_token = now
@@ -345,7 +384,8 @@ class Engine:
         if self._gated():
             self.stats.blocked_dispatches += 1
             return False
-        batch = self.sched.schedule(self.requests, self._try_admit)
+        batch = self.sched.schedule(self.requests, self._try_admit,
+                                    self._spill)
         self.stats.steps += 1
         if batch.empty:
             return False

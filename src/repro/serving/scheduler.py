@@ -47,8 +47,12 @@ class Request:
     state: ReqState = ReqState.WAITING
     generated: List[int] = field(default_factory=list)
     pages: List[int] = field(default_factory=list)
+    # the memory-plane handle behind ``pages`` (None until admitted, or
+    # when admission went through a plain page-list allocator)
+    lease: Optional[object] = None
     n_prefilled: int = 0
     recomputes: int = 0
+    blocked_admits: int = 0       # consecutive failed admission attempts
     t_submit: float = 0.0
     t_first_token: Optional[float] = None
     t_last_token: Optional[float] = None
@@ -90,6 +94,12 @@ class SchedulerConfig:
     # decode slots ride along with prefill rows in one mixed dispatch;
     # False reproduces the seed engine's prefill-XOR-decode alternation
     piggyback_decode: bool = True
+    # after this many consecutive failed admissions of the queue head,
+    # waiting requests' surviving-prefix pages are spilled (released) one
+    # at a time until the head fits — partial KV retention is a luxury
+    # that must degrade to whole-request recompute, never deadlock
+    # admission on pages held by requests that cannot run
+    spill_after_blocked: int = 3
 
     @property
     def budget(self) -> int:
@@ -131,9 +141,15 @@ class ScheduledBatch:
         return sum(s.length for s in self.prefill)
 
 
-# try_admit(request) → allocated pages, or None to block admission (the
-# request stays at the queue head — FIFO head-of-line blocking).
+# try_admit(request) → the request's KVLease (or a plain page list), or
+# None to block admission (the request stays at the queue head — FIFO
+# head-of-line blocking).  For a partially-invalidated request the lease
+# is *extended*: its ``resume_tokens`` is where prefill resumes.
 AdmitFn = Callable[[Request], Optional[List[int]]]
+
+# spill(request) → release a waiting request's surviving-prefix pages
+# (scheduler-driven deadlock valve; see SchedulerConfig.spill_after_blocked)
+SpillFn = Callable[[Request], None]
 
 
 class BatchScheduler:
@@ -158,19 +174,42 @@ class BatchScheduler:
         return bool(self.queue or self.running)
 
     # ------------------------------------------------------------------
-    def admit(self, requests: Dict[str, Request], try_admit: AdmitFn) -> int:
+    def admit(self, requests: Dict[str, Request], try_admit: AdmitFn,
+              spill: Optional[SpillFn] = None) -> int:
         """FIFO admission until memory or the batch cap blocks; returns the
-        number of requests admitted."""
+        number of requests admitted.
+
+        When the head has been blocked ``spill_after_blocked`` times in a
+        row and a ``spill`` callback is given, waiting requests' surviving-
+        prefix pages are released one at a time (head first) until the head
+        fits — sustained pressure degrades partial retention to the legacy
+        whole-request recompute instead of deadlocking on pages held by
+        requests that cannot run.
+        """
         admitted = 0
         while self.queue and len(self.running) < self.cfg.max_batch:
             req = requests[self.queue[0]]
-            pages = try_admit(req)
-            if pages is None:
+            res = try_admit(req)
+            if res is None and spill is not None:
+                req.blocked_admits += 1
+                if req.blocked_admits >= self.cfg.spill_after_blocked:
+                    for rid in list(self.queue):
+                        if not requests[rid].pages:
+                            continue
+                        spill(requests[rid])
+                        res = try_admit(req)
+                        if res is not None:
+                            break
+            if res is None:
                 break                    # head-of-line blocks until pages free
             self.queue.pop(0)
-            req.pages = pages
+            req.blocked_admits = 0
+            req.pages = list(res)
             req.state = ReqState.PREFILL
-            req.n_prefilled = 0
+            # a lease resumes where its valid KV ends (0 when fresh): the
+            # shared prefix at first admission, the surviving prefix on a
+            # post-invalidation re-admission
+            req.n_prefilled = getattr(res, 'resume_tokens', 0)
             self.running.append(req.req_id)
             admitted += 1
         return admitted
@@ -204,8 +243,8 @@ class BatchScheduler:
                 rows_left -= 1
         return batch
 
-    def schedule(self, requests: Dict[str, Request],
-                 try_admit: AdmitFn) -> ScheduledBatch:
+    def schedule(self, requests: Dict[str, Request], try_admit: AdmitFn,
+                 spill: Optional[SpillFn] = None) -> ScheduledBatch:
         """One scheduling decision: admit, then compose the dispatch."""
-        self.admit(requests, try_admit)
+        self.admit(requests, try_admit, spill)
         return self.compose(requests)

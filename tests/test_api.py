@@ -205,3 +205,61 @@ def test_pool_session_ownership_is_name_segment_exact():
     assert s10.alloc(r10, 2) is not None
     assert s1.owned_requests() == []
     assert s10.owned_requests() == [r10]
+
+
+# ---------------------------------------------------------------------------
+# Memory-plane API v1: leases through sessions
+# ---------------------------------------------------------------------------
+
+def test_partial_invalidation_keeps_route_until_release():
+    """A session-owned request that survives a reclamation with a prefix
+    keeps its lease AND its delivery route (route lifetime == lease
+    lifetime); a second reclamation still reaches it; finish drains."""
+    rt, pool, _ = _rt(n_handles=6, pph=4)
+    hits = []
+    s = rt.open_session('offline', name='s',
+                        on_invalidate=lambda inv: hits.append(
+                            {k: (v.keep, v.resume) for k, v in inv.items()}))
+    rid = s.new_request_id()
+    lease = s.alloc(rid, 20)                    # fills every offline handle
+    assert lease is not None
+    lease.note_filled(80)                       # fully materialized
+    on = rt.open_session('online', name='on')
+    assert on.admit('b0', 8) is not None        # reclaims the cheapest tail
+    keep, resume = hits[-1][rid]
+    # Algorithm 1 under the plane cost picks an UNFILLED-tail handle: the
+    # whole 80-token fill survives (resume clamps to the fill)
+    assert keep > 0 and resume == min(keep * pool.page_size, 80) == 80
+    assert len(lease) == keep and lease.resume_tokens == resume
+    # the survivor keeps its route: a second, pool-draining burst still
+    # reaches it (now losing the whole prefix → lease released)
+    assert rid in rt.invalidation_routes()
+    assert on.admit('b1', 16) is not None
+    assert rid in hits[-1]
+    assert hits[-1][rid][0] < keep              # prefix shrank further
+    s.finish(rid)
+    on.finish('b0')
+    on.finish('b1')
+    assert rt.invalidation_routes() == []
+    rt.check_invariants()
+
+
+def test_session_admit_extends_surviving_lease():
+    """Re-admitting a partially-invalidated id extends the SAME lease back
+    to the target and keeps the resume point (the engine's re-admission
+    path after the patch requeues a victim)."""
+    rt, pool, _ = _rt(n_handles=6, pph=4)
+    s = rt.open_session('offline', name='s')
+    lease = s.alloc('s-0', 20)
+    lease.note_filled(80)
+    on = rt.open_session('online', name='on')
+    assert on.admit('b0', 8) is not None
+    keep = len(lease)
+    assert 0 < keep < 20
+    resume = lease.resume_tokens
+    assert resume == min(keep * pool.page_size, 80)
+    # extend back toward the target within what offline still has free
+    again = s.admit('s-0', 16)
+    assert again is lease and len(lease) == 16
+    assert lease.resume_tokens == resume        # resume point survived
+    rt.check_invariants()

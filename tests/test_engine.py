@@ -7,6 +7,7 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.core.clock import VirtualClock
+from repro.core.memory import MemoryPlane
 from repro.core.runtime import RuntimeConfig, ValveRuntime
 from repro.models.api import build_model
 from repro.serving.engine import Engine, EngineConfig, ReqState
@@ -85,7 +86,12 @@ def test_continuous_batching_two_requests():
     eng.run_to_completion()
     assert len(eng.output_tokens(r1)) == 5
     assert len(eng.output_tokens(r2)) == 7
-    pool.check_invariants()
+    plane = MemoryPlane.of(pool)
+    plane.check_invariants()
+    assert plane.live_leases() == []            # every lease released
+    # finished requests may leave zero-ref prefix pages in the retention
+    # cache; dropping it must return the pool to exactly empty
+    plane.drop_cache()
     assert pool.used_pages_for('offline') == 0  # all freed on finish
 
 
@@ -111,10 +117,13 @@ def test_invalidation_recompute_round_trip():
         if len(req.generated) >= 3:
             break
     # reclaim every handle that holds this request's pages (simulating the
-    # runtime's compute-first reclamation; gates are a no-op here)
+    # runtime's compute-first reclamation; gates are a no-op here).  The
+    # plane translates the raw page map into LeaseInvalidations — losing
+    # every handle leaves no surviving prefix, the full-restart worst case
     handles = sorted({pool2.handle_of(p) for p in req.pages})
-    inv = pool2.reclaim_handles(handles)
+    inv = MemoryPlane.of(pool2).reclaim_handles(handles)
     assert rid in inv
+    assert inv[rid].keep == 0 and inv[rid].resume == 0
     eng2.on_pages_invalidated(inv)
     assert eng2.requests[rid].state == ReqState.WAITING
     assert eng2.requests[rid].recomputes == 1
@@ -137,7 +146,7 @@ def test_double_invalidation_no_duplicate_requeue():
         eng.step()
         if len(eng.requests[rid].generated) >= 2:
             break
-    inv = pool.reclaim_handles(pool.handles_of_request(rid))
+    inv = MemoryPlane.of(pool).reclaim_handles(pool.handles_of_request(rid))
     assert rid in inv
     eng.on_pages_invalidated(inv)
     eng.on_pages_invalidated(inv)        # double delivery
@@ -233,3 +242,131 @@ def test_runtime_gating_blocks_offline():
     assert rt.offline_may_dispatch()
     assert eng.step() is True
     rt.check_invariants()
+
+
+def test_partial_invalidation_resumes_from_surviving_prefix():
+    """Reclaiming only a TAIL handle mid-generation must resume prefill
+    from the surviving prefix — same final output as an undisturbed run,
+    but strictly fewer recomputed tokens than a full restart."""
+    eng, _, pool, model, params = _setup(pool_handles=12, pph=2)
+    cfg = model.cfg
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(1, cfg.vocab_size, size=9).tolist()
+
+    ref_rid = eng.submit(prompt, max_new_tokens=8)
+    eng.run_to_completion()
+    ref = eng.output_tokens(ref_rid)
+
+    eng2, _, pool2, _, _ = _setup(pool_handles=12, pph=2, seed=0)
+    rid = eng2.submit(prompt, max_new_tokens=8)
+    for _ in range(20):
+        eng2.step()
+        req = eng2.requests[rid]
+        if len(req.generated) >= 3:
+            break
+    # hit ONLY the handle holding logical page 2 — pages 0-1 survive
+    mid_handle = pool2.handle_of(req.pages[2])
+    inv = MemoryPlane.of(pool2).reclaim_handles([mid_handle])
+    assert inv[rid].keep == 2
+    assert inv[rid].resume == 2 * pool2.page_size == 8
+    eng2.on_pages_invalidated(inv)
+    assert req.state == ReqState.WAITING
+    assert req.n_prefilled == 8                  # resume point, not 0
+    assert len(req.pages) == 2                   # surviving prefix kept
+    full_restart = len(req.context)
+    assert eng2.stats.tokens_recomputed == full_restart - 8 < full_restart
+    kept = list(req.generated)
+    eng2.run_to_completion()
+    out = eng2.output_tokens(rid)
+    assert out[: len(kept)] == kept
+    assert out == ref, (out, ref)                # resume is exact
+    MemoryPlane.of(pool2).check_invariants()
+
+
+def test_prefix_sharing_identical_outputs_and_fewer_chunks():
+    """A shared-prefix batch admitted in waves attaches the published
+    prompt pages: greedy outputs are bit-identical to the sharing-off run
+    while prefill work drops."""
+    cfg = reduced(get_config('internlm2-1.8b'), page_size=4)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(1, cfg.vocab_size, 12).tolist()   # 3 full pages
+    tails = [rng.integers(1, cfg.vocab_size, 5).tolist() for _ in range(6)]
+
+    def run(sharing):
+        pool = KVPool(16, 4, page_size=4, reserved_handles=1)
+        MemoryPlane(pool, sharing=sharing)
+        eng = Engine(model, params, pool,
+                     EngineConfig(max_batch=3, max_seq=32, prefill_chunk=8))
+        rids = [eng.submit(prefix + t, max_new_tokens=5) for t in tails]
+        eng.run_to_completion()
+        plane = MemoryPlane.of(pool)
+        plane.check_invariants()
+        return ([eng.output_tokens(r) for r in rids],
+                eng.stats.prefill_chunks, plane.stats.shared_pages_attached)
+
+    out_off, chunks_off, shared_off = run(False)
+    out_on, chunks_on, shared_on = run(True)
+    assert shared_off == 0 and shared_on > 0
+    assert out_on == out_off                     # shim-compat: bit-identical
+    assert chunks_on < chunks_off                # prefill work actually saved
+
+
+def test_failed_readmission_keeps_surviving_lease_for_spill():
+    """Regression: a failed re-admission of a partial-invalidation victim
+    must NOT clobber ``req.lease`` with None — the surviving lease is live
+    in the plane, and the spill valve needs the handle to release it."""
+    eng, _, pool, model, _ = _setup(pool_handles=6, pph=2)
+    rng = np.random.default_rng(13)
+    rid = eng.submit(rng.integers(1, model.cfg.vocab_size, 9).tolist(), 8)
+    for _ in range(20):
+        eng.step()
+        if len(eng.requests[rid].generated) >= 2:
+            break
+    req = eng.requests[rid]
+    inv = MemoryPlane.of(pool).reclaim_handles(
+        [pool.handle_of(req.pages[2])])          # tail cut: lease survives
+    eng.on_pages_invalidated(inv)
+    lease = req.lease
+    assert lease is not None and not lease.released
+    # exhaust offline memory so the re-admission extension fails
+    free = pool.free_pages_for('offline')
+    if free:
+        pool.alloc('hog', free, 'offline')
+    assert eng._try_admit(req) is None
+    assert req.lease is lease and not lease.released   # not clobbered
+    # the spill valve can now actually free the survivors
+    eng._spill(req)
+    assert lease.released
+    assert req.lease is None and req.pages == []
+
+
+def test_second_hit_while_queued_charges_only_the_shrink():
+    """A queued recompute victim hit by a SECOND reclamation shrinks its
+    resume point; the recompute metric telescopes to exactly the full
+    restart cost (duplicate deliveries still charge zero), and the request
+    is never double-requeued."""
+    eng, _, pool, model, _ = _setup(pool_handles=12, pph=2)
+    rng = np.random.default_rng(21)
+    rid = eng.submit(rng.integers(1, model.cfg.vocab_size, 9).tolist(), 8)
+    for _ in range(20):
+        eng.step()
+        if len(eng.requests[rid].generated) >= 3:
+            break
+    req = eng.requests[rid]
+    plane = MemoryPlane.of(pool)
+    inv1 = plane.reclaim_handles([pool.handle_of(req.pages[2])])
+    eng.on_pages_invalidated(inv1)
+    ctx = len(req.context)
+    assert req.n_prefilled == 8 and rid in eng.queue
+    assert eng.stats.tokens_recomputed == ctx - 8
+    # second burst hits the surviving prefix while the victim is queued
+    inv2 = plane.reclaim_handles([pool.handle_of(req.pages[0])])
+    eng.on_pages_invalidated(inv2)
+    assert req.n_prefilled == 0
+    assert eng.queue.count(rid) == 1          # still no duplicate requeue
+    assert eng.stats.invalidations == 1       # counts requeue events
+    assert eng.stats.tokens_recomputed == ctx # telescoped: full restart
+    eng.run_to_completion()
+    assert len(eng.output_tokens(rid)) == 8

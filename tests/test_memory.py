@@ -1,0 +1,426 @@
+"""Memory-plane API v1: lease lifecycle, refcounted CoW prefix sharing,
+partial (surviving-prefix) invalidation, incremental pool counters, and the
+memoized Algorithm 1 variants.
+
+Deliberately jax-free: ``scripts/ci.sh`` runs this file as the fast lease
+property smoke.  The deterministic random-ops suites below always run; the
+hypothesis section at the bottom deepens them when hypothesis is installed
+(declared in pyproject ``[test]``; plain envs skip it, not error).
+"""
+import random
+
+import pytest
+
+from repro.core import eviction
+from repro.core.memory import KVLease, LeaseInvalidation, MemoryPlane
+from repro.serving.kvpool import KVPool, QUARANTINE_PAGE
+
+
+def _plane(n_handles=8, pph=4, page=4, reserved=1, **kw):
+    pool = KVPool(n_handles, pph, page_size=page, reserved_handles=reserved)
+    return MemoryPlane(pool, **kw), pool
+
+
+# ---------------------------------------------------------------------------
+# Lease lifecycle
+# ---------------------------------------------------------------------------
+
+def test_lease_basic_lifecycle():
+    pl, pool = _plane()
+    lease = pl.admit('a', 4, 'offline')
+    assert isinstance(lease, KVLease)
+    assert len(lease) == 4 and lease.resume_tokens == 0
+    assert lease == pool.pages_of_request('a')      # list-compatible
+    assert lease.extend(2) and len(lease) == 6
+    # admit on a live id is extend-to-target, same lease object
+    assert pl.admit('a', 8, 'offline') is lease and len(lease) == 8
+    pl.check_invariants()
+    lease.release()
+    assert lease.released and pl.live_leases() == []
+    assert pool.used_pages_for('offline') == 0
+    pl.check_invariants()
+
+
+def test_release_drops_refs_to_exactly_zero():
+    pl, pool = _plane()
+    prompt = list(range(13))
+    a = pl.admit('a', 4, 'offline', prompt=prompt, scope='s')
+    a.note_filled(13)                                # publishes pages 0..2
+    b = pl.admit('b', 4, 'offline', prompt=prompt, scope='s')
+    shared = list(b)[:3]
+    assert shared == list(a)[:3] and b.resume_tokens == 12
+    for p in shared:
+        assert len(pl._page_users[p]) == 2
+    a.release()
+    for p in shared:
+        assert pl._page_users[p] == {'b'}            # exactly one ref left
+    b.release()
+    for p in shared:
+        assert len(pl._page_users[p]) == 0           # zero, retained in cache
+        assert p in pl._cache
+    pl.check_invariants()
+    pl.drop_cache()
+    assert pool.used_pages_for('offline') == 0
+    pl.check_invariants()
+
+
+def test_admit_failure_rolls_back_attachments():
+    pl, pool = _plane(n_handles=2, pph=4, reserved=1)   # 4 offline pages
+    prompt = list(range(13))
+    a = pl.admit('a', 4, 'offline', prompt=prompt, scope='s')
+    a.note_filled(13)
+    # pool exhausted: the second admission must fail WITHOUT leaking the
+    # shared-prefix refs it attached before the private alloc failed
+    assert pl.admit('b', 4, 'offline', prompt=prompt, scope='s') is None
+    assert pl.live_leases() == ['a']
+    for p in list(a):
+        assert pl._page_users[p] == {'a'}
+    pl.check_invariants()
+
+
+def test_same_id_readmits_after_full_release_with_shared_survivors():
+    """A request id whose pages outlive it (shared with another lease) must
+    be re-admittable — pool ownership moves to an internal block id."""
+    pl, pool = _plane()
+    prompt = list(range(13))
+    a = pl.admit('a', 4, 'offline', prompt=prompt, scope='s')
+    a.note_filled(13)
+    b = pl.admit('b', 4, 'offline', prompt=prompt, scope='s')
+    a.release()                     # b still refs a's prefix pages
+    a2 = pl.admit('a', 4, 'offline', prompt=prompt, scope='s')
+    assert a2 is not None and a2.resume_tokens == 12   # re-attached
+    pl.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# CoW / fork
+# ---------------------------------------------------------------------------
+
+def test_fork_then_diverge_never_mutates_parent():
+    pl, pool = _plane()
+    parent = pl.admit('p', 6, 'offline')
+    parent.note_filled(8)                       # 2 full pages materialized
+    before = list(parent)
+    child = parent.fork('c')
+    assert list(child)[:2] == before[:2]        # CoW-shared filled prefix
+    assert child.resume_tokens == 8
+    assert set(list(child)[2:]).isdisjoint(before)   # divergent tail private
+    # the child diverges (fills its own tail) — the parent's page list and
+    # fill must be untouched
+    child.note_filled(24)
+    assert list(parent) == before and parent.filled == 8
+    child.release()
+    assert list(parent) == before
+    pl.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Partial invalidation
+# ---------------------------------------------------------------------------
+
+def test_partial_invalidation_keeps_surviving_prefix():
+    pl, pool = _plane(n_handles=6, pph=4)
+    a = pl.admit('a', 10, 'offline')            # spans ≥3 offline handles
+    a.note_filled(40)                           # fully materialized
+    last = pool.handle_of(list(a)[9])           # handle holding the tail
+    inv = pl.reclaim_handles([last])
+    assert 'a' in inv
+    la = inv['a']
+    assert isinstance(la, LeaseInvalidation)
+    assert 0 < la.keep < 10
+    assert la.resume == la.keep * pool.page_size
+    assert la.lost_tokens == 40 - la.resume
+    assert not la.released
+    # the lease was truncated to the surviving prefix and is extendable
+    assert len(a) == la.keep and a.filled == la.resume
+    assert pl.admit('a', 10, 'offline') is a and len(a) == 10
+    assert a.resume_tokens == la.resume         # resume point survived
+    pl.check_invariants()
+
+
+def test_whole_invalidation_when_prefix_dies():
+    pl, pool = _plane(n_handles=6, pph=4)
+    a = pl.admit('a', 10, 'offline')
+    a.note_filled(40)
+    first = pool.handle_of(list(a)[0])          # handle holding page 0
+    inv = pl.reclaim_handles([first])
+    assert inv['a'].keep == 0 and inv['a'].released
+    assert a.released and pl.live_leases() == []
+    pl.check_invariants()
+
+
+def test_partial_disabled_reports_no_survivors():
+    pl, pool = _plane(n_handles=6, pph=4, partial=False)
+    a = pl.admit('a', 10, 'offline')
+    a.note_filled(40)
+    last = pool.handle_of(list(a)[9])
+    inv = pl.reclaim_handles([last])
+    assert inv['a'].keep == 0 and inv['a'].released   # legacy semantics
+    pl.check_invariants()
+
+
+def test_shared_page_invalidation_hits_every_user_at_same_position():
+    pl, pool = _plane(n_handles=8, pph=4)
+    prompt = list(range(13))
+    a = pl.admit('a', 6, 'offline', prompt=prompt, scope='s')
+    a.note_filled(13)
+    b = pl.admit('b', 6, 'offline', prompt=prompt, scope='s')
+    b.note_filled(20)
+    shared_page = list(a)[1]                    # logical position 1, both
+    inv = pl.reclaim_handles([pool.handle_of(shared_page)])
+    assert set(inv) >= {'a', 'b'}
+    assert inv['a'].keep == inv['b'].keep       # same logical cut
+    pl.check_invariants()
+
+
+def test_legacy_ids_keep_whole_request_semantics():
+    """Ids allocated around the plane lose everything, like the old pool."""
+    pl, pool = _plane(n_handles=4, pph=4)
+    pool.alloc('legacy', 6, 'offline')          # direct, no lease
+    h = pool.handles_of_request('legacy')[0]
+    inv = pl.reclaim_handles([h])
+    assert inv['legacy'].keep == 0 and inv['legacy'].released
+    assert 'legacy' not in pool.pages_of        # survivors freed too
+    pl.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Pool satellite fixes
+# ---------------------------------------------------------------------------
+
+def test_noop_free_does_not_count():
+    """Regression: ``free`` for an id holding no pages must not count as a
+    lifecycle event (reclaim already freed invalidated requests, so the
+    engine's terminal free double-counted)."""
+    pool = KVPool(4, 4, reserved_handles=1)
+    pool.alloc('a', 3, 'offline')
+    assert pool.free('a') == 3
+    assert pool.stats.frees == 1
+    assert pool.free('a') == 0                  # no-op
+    assert pool.free('never-existed') == 0
+    assert pool.stats.frees == 1                # unchanged
+    pool.check_invariants()
+
+
+def test_pool_incremental_counters_random_ops():
+    """free_pages_for / used_pages_for / online_used_handles are O(1)
+    counters now; a seeded op soup cross-checks them against the full-scan
+    invariants after every operation."""
+    rng = random.Random(7)
+    pool = KVPool(6, 4, reserved_handles=2)
+    live = []
+    for i in range(400):
+        op = rng.randrange(6)
+        if op in (0, 1):
+            rid = f'r{i}'
+            klass = 'online' if op == 0 else 'offline'
+            if pool.alloc(rid, rng.randint(1, 6), klass) is not None:
+                live.append(rid)
+        elif op == 2 and live:
+            pool.free(live.pop(rng.randrange(len(live))))
+        elif op == 3:
+            offl = pool.offline_handles()
+            if offl:
+                inv = pool.reclaim_handles([rng.choice(offl)])
+                live = [r for r in live if r in pool.pages_of]
+        elif op == 4:
+            empties = pool.empty_offline_handles()
+            if empties:
+                pool.reserve_handle(rng.choice(empties))
+        else:
+            pool.release_reserved_handle()
+        pool.check_invariants()     # cross-checks every counter vs scan
+    assert pool.owner[QUARANTINE_PAGE] is None
+
+
+# ---------------------------------------------------------------------------
+# Eviction: memoized == naive, partial model prefers tails
+# ---------------------------------------------------------------------------
+
+def _random_instance(rng):
+    n_handles = rng.randint(2, 10)
+    n_reqs = rng.randint(1, 14)
+    costs = {f'r{i}': rng.randint(1, 200) for i in range(n_reqs)}
+    assign = {h: {r for r in costs if rng.random() < 0.35}
+              for h in range(n_handles)}
+    return n_handles, costs, assign
+
+
+def test_memoized_select_handles_equals_naive_seeded():
+    rng = random.Random(0)
+    for _ in range(300):
+        n_handles, costs, assign = _random_instance(rng)
+        k = rng.randint(1, n_handles)
+        got = eviction.select_handles(
+            k, list(range(n_handles)), assign.__getitem__, costs.__getitem__)
+        want = eviction._select_handles_naive(
+            k, list(range(n_handles)), assign.__getitem__, costs.__getitem__)
+        assert got == want, (k, costs, assign)
+
+
+def test_select_handles_partial_matches_naive_cut_model():
+    """The memoized partial selector must equal a brute-force greedy over
+    the same marginal-loss model (min-cut semantics)."""
+    rng = random.Random(1)
+    for _ in range(200):
+        n_handles = rng.randint(2, 8)
+        n_reqs = rng.randint(1, 8)
+        filled = {f'r{i}': rng.randint(0, 64) for i in range(n_reqs)}
+        impact = {h: {r: rng.randint(0, 15) for r in filled
+                      if rng.random() < 0.4} for h in range(n_handles)}
+        pg = 4
+
+        def loss(r, idx):
+            return max(0, filled[r] - idx * pg)
+
+        k = rng.randint(1, n_handles)
+        got = eviction.select_handles_partial(
+            k, list(range(n_handles)), impact.__getitem__, loss)
+
+        # brute-force greedy oracle
+        S, cut = [], {}
+        for _round in range(k):
+            best, best_c = None, None
+            for h in range(n_handles):
+                if h in S:
+                    continue
+                c = sum(loss(r, min(cut.get(r, 1 << 30), idx))
+                        - loss(r, cut.get(r, 1 << 30))
+                        for r, idx in impact[h].items())
+                if best_c is None or c < best_c:
+                    best, best_c = h, c
+            S.append(best)
+            for r, idx in impact[best].items():
+                cut[r] = min(cut.get(r, 1 << 30), idx)
+        assert got == S, (impact, filled)
+
+
+def test_partial_cost_prefers_tail_and_cached_handles():
+    """Algorithm 1 under the plane's cost: a handle holding only a
+    request's TAIL pages (small marginal recompute) beats one holding its
+    head, and zero-ref cached prefix pages are free to take."""
+    pl, pool = _plane(n_handles=8, pph=4)
+    a = pl.admit('a', 12, 'offline')
+    a.note_filled(48)
+    handles = pool.handles_of_request('a')
+    # the selector must pick the tail handle (lowest marginal recompute)
+    pick = eviction.select_handles_partial(
+        1, handles, pl.impact_of, pl.recompute_cost)
+    tail_handle = pool.handle_of(list(a)[-1])
+    assert pick == [tail_handle], pick
+    # a finished request's cached prefix pages cost nothing
+    b = pl.admit('b', 4, 'offline', prompt=list(range(17)), scope='s')
+    b.note_filled(17)
+    b.release()                                 # pages retained, zero-ref
+    cached_handle = pool.handle_of(pl._prefix_index[
+        next(iter(pl._prefix_index))])
+    assert pl.impact_of(cached_handle).get('b') is None
+    pl.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Deterministic lease-op soup (the ci.sh fast smoke)
+# ---------------------------------------------------------------------------
+
+def _lease_soup(seed, steps=300):
+    rng = random.Random(seed)
+    pl, pool = _plane(n_handles=8, pph=4, page=4, reserved=1)
+    prompts = [list(range(20)), list(range(100, 120)), list(range(13))]
+    seq = 0
+    for _ in range(steps):
+        op = rng.randrange(8)
+        live = [pl.leases[l] for l in pl.live_leases()]
+        if op in (0, 1):
+            seq += 1
+            klass = 'online' if rng.random() < 0.2 else 'offline'
+            prompt = rng.choice(prompts) if rng.random() < 0.7 else None
+            pl.admit(f'r{seq}', rng.randint(1, 8), klass,
+                     prompt=prompt, scope='s' if klass == 'offline' else 'o')
+        elif op == 2 and live:
+            lease = rng.choice(live)
+            lease.note_filled(rng.randint(0, len(lease) * 4))
+        elif op == 3 and live:
+            rng.choice(live).extend(rng.randint(1, 3))
+        elif op == 4 and live:
+            seq += 1
+            rng.choice(live).fork(f'f{seq}', rng.randint(1, 8))
+        elif op == 5 and live:
+            rng.choice(live).release()
+        elif op == 6:
+            offl = pool.offline_handles()
+            if offl:
+                pl.reclaim_handles([rng.choice(offl)])
+        else:
+            if rng.random() < 0.3:
+                pl.drop_cache()
+            elif pool.empty_offline_handles():
+                pool.reserve_handle(pool.empty_offline_handles()[0])
+            else:
+                pool.release_reserved_handle()
+        pl.check_invariants()
+    # teardown must return the pool to exactly empty
+    for lid in list(pl.live_leases()):
+        pl.release_id(lid)
+    pl.drop_cache()
+    pl.check_invariants()
+    assert pool.used_pages_for('online') == 0
+    assert pool.used_pages_for('offline') == 0
+
+
+def test_lease_random_ops_smoke():
+    for seed in (0, 1, 2):
+        _lease_soup(seed)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property suite (skips cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                         # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_lease_soup_property(seed):
+        """Invariants hold under arbitrary lease-op sequences: no page
+        double-owned, refcounts == user sets, zero-ref pages cached or
+        freed, fills within bounds (checked after every op)."""
+        _lease_soup(seed, steps=120)
+
+    @settings(max_examples=80, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 10))
+    def test_memoized_eviction_equivalence_property(seed, k):
+        rng = random.Random(seed)
+        n_handles, costs, assign = _random_instance(rng)
+        got = eviction.select_handles(
+            k, list(range(n_handles)), assign.__getitem__,
+            costs.__getitem__)
+        want = eviction._select_handles_naive(
+            k, list(range(n_handles)), assign.__getitem__,
+            costs.__getitem__)
+        assert got == want
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_fork_cow_property(seed):
+        """fork-then-diverge never mutates the parent's pages; releasing
+        the child leaves the parent's refs intact."""
+        rng = random.Random(seed)
+        pl, pool = _plane(n_handles=8, pph=4)
+        parent = pl.admit('p', rng.randint(1, 8), 'offline')
+        parent.note_filled(rng.randint(0, len(parent) * 4))
+        before, fill_before = list(parent), parent.filled
+        child = parent.fork('c', rng.randint(1, 8))
+        if child is not None:
+            child.note_filled(len(child) * 4)
+            assert list(parent) == before
+            assert parent.filled == fill_before
+            child.release()
+        assert list(parent) == before
+        for p in before:
+            assert 'p' in pl._page_users[p]
+        pl.check_invariants()

@@ -167,3 +167,52 @@ def test_budget_defaults_to_rows_times_chunk():
     cfg = SchedulerConfig(chunk=16, max_prefill_reqs=3)
     assert cfg.budget == 48
     assert SchedulerConfig(chunk=16, prefill_budget=20).budget == 20
+
+
+def test_spill_after_sustained_head_blocking():
+    """Partial KV retention must not deadlock admission: after
+    ``spill_after_blocked`` consecutive failures of the queue head, waiting
+    requests' surviving-prefix pages are spilled (head first) one at a time
+    until the head fits."""
+    reqs = _requests(8, 8)
+    s = _sched(reqs, SchedulerConfig(max_batch=4, chunk=16,
+                                     spill_after_blocked=3))
+    reqs['r0'].pages = [1, 2]            # waiting, holding survivors
+    reqs['r1'].pages = [3]
+    spilled = []
+
+    def admit(req):
+        # memory frees only once BOTH survivors are spilled
+        return [9, 9] if len(spilled) == 2 else None
+
+    def spill(r):
+        spilled.append(r.req_id)
+        r.pages = []
+
+    for _ in range(2):                   # below the threshold: no spill
+        s.admit(reqs, admit, spill)
+        assert spilled == []
+    s.admit(reqs, admit, spill)          # 3rd failure → incremental spill
+    assert spilled == ['r0', 'r1']
+    # head admitted after the spills (and r1 right behind it, now that
+    # memory is free)
+    assert s.running == ['r0', 'r1']
+    assert reqs['r0'].pages == [9, 9]
+    assert reqs['r0'].blocked_admits == 0
+
+
+def test_admit_resumes_at_lease_resume_tokens():
+    """Admission takes the resume point from the lease (shared prefix on a
+    fresh admit, surviving prefix on a re-admit) instead of resetting the
+    prefill cursor to 0."""
+    class FakeLease(list):
+        resume_tokens = 8
+
+    reqs = _requests(16)
+    s = _sched(reqs, SchedulerConfig(max_batch=2, chunk=16,
+                                     max_prefill_reqs=2))
+    b = s.schedule(reqs, lambda r: FakeLease([1, 2, 3, 4]))
+    assert reqs['r0'].n_prefilled == 8
+    # the composed prefill row starts at the resume point
+    assert [(p.req_id, p.start, p.length) for p in b.prefill] == \
+        [('r0', 8, 8)]
