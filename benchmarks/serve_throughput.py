@@ -2,7 +2,7 @@
 repo's own serving trajectory (ROADMAP: every PR makes a hot path measurably
 faster or records why not).
 
-Two experiments, one JSON:
+Three experiments, one JSON:
 
 1. **batched chunked prefill vs the seed path** — a fixed offline workload
    drained to completion under (a) the seed one-request-at-a-time prefill
@@ -11,6 +11,12 @@ Two experiments, one JSON:
    outputs must be identical; scheduler steps-to-completion must drop.
 2. **node demo** — the heterogeneous NodeOrchestrator demo under bursty
    online traffic: online TTFT/TPOT p50, offline tokens/s, dispatches/s.
+3. **streaming front-end** — the async HTTP surface under trace-replayed
+   load: ≥ 64 concurrent SSE streams (front-loaded arrival burst) with an
+   offline batch job backfilling, through the in-process ASGI client (the
+   exact server code path minus the socket).  Records requests/s, p50/p99
+   TTFT and peak concurrency; hard gates: every stream completes, peak
+   concurrency ≥ 64, and the ≤ 1-preemption-per-online-request bound holds.
 
 Writes ``results/serve_throughput.json`` (benchmark convention) and mirrors
 it to ``BENCH_serve.json`` at the repo root (the perf-trajectory record).
@@ -63,6 +69,67 @@ def _drain_offline(batched: bool, *, n_reqs: int = 8, prompt: int = 24,
     }
 
 
+def _streaming_frontend(n_streams: int = 72, max_new: int = 6,
+                        horizon_s: float = 2.0, seed: int = 0) -> Dict:
+    """Trace-replay the async front-end: every arrival opens a live SSE
+    stream through the ASGI app while one batch job backfills offline."""
+    import asyncio
+
+    from repro.core.clock import RealClock
+    from repro.launch.serve import build_node
+    from repro.serving.frontend.app import FrontendApp
+    from repro.serving.frontend.driver import AsyncNodeDriver
+    from repro.serving.frontend.loadgen import (
+        LoadGenerator, TraceEntry, make_online_trace)
+    from repro.serving.frontend.testing import ASGIClient
+
+    node = build_node(clock=RealClock())
+    # all arrivals in the first 10% of the horizon → peak concurrency is
+    # the whole trace (streams outlive the arrival window)
+    trace = make_online_trace(n_streams, horizon_s=horizon_s,
+                              prompt_len=12, max_new_tokens=max_new,
+                              seed=seed, burst_frac=1.0)
+    trace.append(TraceEntry(t=0.0, kind='batch', n_requests=6,
+                            prompt_len=16, max_new_tokens=12,
+                            seed=seed + 500))
+
+    async def scenario():
+        async with AsyncNodeDriver(node) as driver:
+            client = ASGIClient(FrontendApp(driver))
+            gen = LoadGenerator(client, node.clock,
+                                vocab_size=node.online.mcfg.vocab_size)
+            report = await gen.replay(trace)
+            # streams are done; let the pump drain the offline batch
+            while node.has_work():
+                await asyncio.sleep(1e-3)
+            return report
+
+    t0 = time.monotonic()
+    report = asyncio.run(scenario())
+    wall = time.monotonic() - t0
+    node.runtime.check_invariants()
+    m = node.metrics()
+
+    if report.completed != n_streams:
+        raise RuntimeError(f'streaming front-end dropped requests: '
+                           f'{report.completed}/{n_streams} completed')
+    if report.peak_concurrent_streams < 64:
+        raise RuntimeError(f'peak concurrency {report.peak_concurrent_streams}'
+                           f' < 64 — the burst did not overlap')
+    if m['max_preemptions_per_request'] > 1:
+        raise RuntimeError('preemption bound violated under streaming load')
+
+    out = report.to_dict()
+    out.update({
+        'wall_s': wall,
+        'offline_tokens': m['offline_tokens'],
+        'compute_preemptions': m['compute_preemptions'],
+        'max_preemptions_per_request': m['max_preemptions_per_request'],
+        'cancellations': m['cancellations'],
+    })
+    return out
+
+
 def run(steps: int = 200, out_path: str = 'results/serve_throughput.json',
         bench_path: str = 'BENCH_serve.json') -> Dict:
     from repro.launch.serve import serve_demo
@@ -86,6 +153,8 @@ def run(steps: int = 200, out_path: str = 'results/serve_throughput.json',
     total_dispatches = (demo['online_dispatches']
                        + demo['offline_dispatches'])
 
+    streaming = _streaming_frontend()
+
     result = {
         'prefill_composition': {
             'seed_single_request': single,
@@ -108,6 +177,7 @@ def run(steps: int = 200, out_path: str = 'results/serve_throughput.json',
                 demo['max_preemptions_per_request'],
             'engines': demo['engines'],
         },
+        'streaming_frontend': streaming,
     }
     os.makedirs(os.path.dirname(out_path) or '.', exist_ok=True)
     for path in (out_path, bench_path):
@@ -122,6 +192,13 @@ def run(steps: int = 200, out_path: str = 'results/serve_throughput.json',
           f"tpot_p50={nd['online_tpot_p50_s']}s "
           f"offline={nd['offline_tokens_per_s']:.1f} tok/s "
           f"dispatches={nd['dispatches_per_s']:.1f}/s")
+    sf = result['streaming_frontend']
+    print(f"streaming front-end: {sf['completed']} streams "
+          f"(peak {sf['peak_concurrent_streams']} concurrent) "
+          f"{sf['requests_per_s']:.1f} req/s "
+          f"ttft_p50={sf['ttft_p50_s']:.3f}s "
+          f"ttft_p99={sf['ttft_p99_s']:.3f}s "
+          f"max_preempt/req={sf['max_preemptions_per_request']}")
     return result
 
 

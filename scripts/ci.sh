@@ -53,6 +53,63 @@ PY
 echo "== node demo smoke (heterogeneous colocation) =="
 python -m repro.launch.serve --steps 50
 
+echo "== serving front-end: SSE conformance (fast gate) =="
+python -m pytest -q tests/test_sse.py
+
+echo "== serving front-end: in-process HTTP smoke (1 stream + 1 batch, no sockets) =="
+python - <<'PY'
+import asyncio, json
+from repro.configs import get_config, reduced
+from repro.core.clock import VirtualClock
+from repro.core.runtime import RuntimeConfig, ValveRuntime
+from repro.launch.node import NodeOrchestrator
+from repro.serving.engine import EngineConfig
+from repro.serving.frontend.app import FrontendApp
+from repro.serving.frontend.driver import AsyncNodeDriver, clock_sleep
+from repro.serving.frontend.testing import ASGIClient
+from repro.serving.kvpool import KVPool
+
+pool = KVPool(6, 4, page_size=4, reserved_handles=1)
+rt = ValveRuntime(pool, RuntimeConfig(n_devices=1, t_cool_init=0.002),
+                  clock=VirtualClock())
+node = NodeOrchestrator(rt, idle_advance=1e-3)
+for klass, seed in (('online', 0), ('offline', 1)):
+    node.add_engine(reduced(get_config('qwen3-0.6b'), page_size=4),
+                    EngineConfig(max_batch=4, max_seq=48, prefill_chunk=8,
+                                 klass=klass), seed=seed)
+
+async def main():
+    async with AsyncNodeDriver(node) as driver:
+        client = ASGIClient(FrontendApp(driver))
+        sr = client.stream('POST', '/v1/completions',
+                           json={'prompt': [5, 7, 11], 'max_tokens': 4,
+                                 'stream': True})
+        toks = 0
+        async with sr:
+            assert sr.status == 200, sr.status
+            async for ev in sr.events():
+                if ev.done:
+                    break
+                if json.loads(ev.data)['choices'][0].get('token') is not None:
+                    toks += 1
+        assert toks == 4, toks
+        job = (await client.post('/v1/batches', json={
+            'requests': [{'prompt': [3, 1, 4], 'max_tokens': 3}]})).json()
+        for _ in range(20000):
+            st = (await client.get(f"/v1/batches/{job['id']}")).json()['status']
+            if st == 'completed':
+                break
+            await clock_sleep(node.clock, 1e-4)
+        assert st == 'completed', st
+        res = (await client.get(f"/v1/batches/{job['id']}/results")).json()
+        assert len(res['results'][0]['tokens']) == 3, res
+
+asyncio.run(main())
+node.runtime.check_invariants()
+assert node.runtime.invalidation_routes() == []
+print('front-end smoke OK: 1 SSE stream (4 tokens) + 1 batch job, in-process')
+PY
+
 echo "== rate-estimator warm-up regressions (fast gate) =="
 python -m pytest -q tests/test_rate_estimators.py
 

@@ -191,6 +191,7 @@ class NodeOrchestrator:
             'online_dispatches': self.stats.online_dispatches,
             'offline_dispatches': self.stats.offline_dispatches,
             'gated_skips': self.stats.gated_skips,
+            'cancellations': sum(e.stats.cancellations for e in self.engines),
             'compute_preemptions': tel['compute_preemptions'],
             'offline_wakeups': tel['offline_wakeups'],
             'reclamations': tel['reclamations'],
@@ -211,6 +212,7 @@ class NodeOrchestrator:
                     'tokens': eng.stats.tokens_generated,
                     'dispatches': eng.stats.dispatches,
                     'mixed_dispatches': eng.stats.mixed_dispatches,
+                    'cancelled': eng.stats.cancellations,
                     # leased pages incl. attached shared-prefix pages
                     # (pool ownership alone would miss attachments)
                     'live_pages': sum(

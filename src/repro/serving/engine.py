@@ -87,6 +87,7 @@ class EngineStats:
     invalidations: int = 0
     blocked_dispatches: int = 0     # offline dispatches skipped while gated
     spills: int = 0                 # surviving prefixes dropped under pressure
+    cancellations: int = 0          # requests abandoned before finishing
 
 
 class Engine:
@@ -250,6 +251,35 @@ class Engine:
         self.running.remove(req.req_id)
         self.session.finish(req.req_id)                     # VALVE-SESSION
         req.pages, req.lease = [], None
+
+    # ------------------------------------------------------------------
+    # Cancellation (client disconnect / batch-job abort)
+    # ------------------------------------------------------------------
+    def cancel(self, req_id: str) -> bool:
+        """Abandon a submitted request; returns False if unknown/terminal.
+
+        A RUNNING/PREFILL request goes through the normal terminal bundle
+        (``session.finish``: lease + route + lifecycle end — for online
+        requests the lifecycle start fired at admission, so the pairing
+        stays balanced).  A QUEUED request was never admitted, so there is
+        no lifecycle notification to unwind; its only possible KV is a
+        surviving prefix kept across an invalidation, and releasing the
+        lease drops the route with it (route lifetime == lease lifetime).
+        A dropped stream therefore can never pin reserved pages."""
+        req = self.requests.get(req_id)
+        if req is None or req.state in (ReqState.FINISHED,
+                                        ReqState.CANCELLED):
+            return False
+        if req_id in self.queue:
+            self.queue.remove(req_id)
+            if req.lease is not None and not req.lease.released:
+                req.lease.release()
+            req.pages, req.lease = [], None
+        else:
+            self._finish(req)
+        req.state = ReqState.CANCELLED
+        self.stats.cancellations += 1
+        return True
 
     # -- mixed prefill(+decode) dispatch -------------------------------------
     def _dispatch_mixed(self, batch: ScheduledBatch) -> None:

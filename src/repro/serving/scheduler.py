@@ -37,6 +37,7 @@ class ReqState(enum.Enum):
     PREFILL = 'prefill'
     RUNNING = 'running'
     FINISHED = 'finished'
+    CANCELLED = 'cancelled'         # abandoned by the client (terminal)
 
 
 @dataclass
