@@ -106,6 +106,16 @@ def micro() -> Dict[str, float]:
                                        / out['pool_alloc_free_us'])
     out['session_notify_overhead_x'] = (out['session_notify_us']
                                         / out['direct_notify_us'])
+    # The deprecated klass-string shims are a veneer over the session path
+    # and must not re-enter it (they used to pay the public wrapper twice):
+    # a shim call may cost at most timing noise over the session call it
+    # wraps.  Explicit raise — this contract must hold under -O too.
+    if out['legacy_shim_alloc_free_us'] > \
+            out['session_alloc_free_us'] * 1.15:
+        raise RuntimeError(
+            f"legacy shim alloc+free {out['legacy_shim_alloc_free_us']:.2f}us"
+            f" > 1.15x session {out['session_alloc_free_us']:.2f}us — the"
+            " shim is double-entering the session path")
     return out
 
 

@@ -29,6 +29,7 @@ BENCHES = [
     ('serve_throughput', 'serving plane — batched prefill vs seed + node demo'),
     ('api_overhead', 'control-plane API v1 — session/event hot-path cost'),
     ('prefix_reuse', 'memory plane v1 — prefix sharing + partial-invalidation tax'),
+    ('kernel_hotpath', 'kernel hot path — fused sampling + prefix-shared decode step'),
 ]
 
 
@@ -61,6 +62,8 @@ def main():
                 mod.run(horizon_s=60.0)
             elif args.fast and name == 'prefix_reuse':
                 mod.run(horizon_s=120.0)
+            elif args.fast and name == 'kernel_hotpath':
+                mod.run(warm=12, steps=24, gen=64)
             else:
                 mod.run()
         except Exception:

@@ -134,12 +134,16 @@ echo "== kernel parity (fast subset, interpret mode) =="
 python -m pytest -q \
     tests/test_kernels_flash.py \
     tests/test_kernels_paged.py \
+    tests/test_kernels_sampling.py \
     tests/test_kernels_rwkv6.py \
     tests/test_kernel_integration.py
 
 if [[ "${1:-}" == "--kernels-only" ]]; then
     exit 0
 fi
+
+echo "== kernel hot-path smoke (fused decode regression gate) =="
+python benchmarks/kernel_hotpath.py --smoke
 
 echo "== tier-1 =="
 python -m pytest -x -q

@@ -108,7 +108,7 @@ class KVLease(_Sequence):
     """
 
     __slots__ = ('plane', 'lease_id', 'klass', 'scope', 'filled',
-                 'released', '_pages', '_pending_publish')
+                 'released', '_pages', '_pending_publish', '_clean')
 
     def __init__(self, plane: 'MemoryPlane', lease_id: str, klass: str,
                  scope: str):
@@ -121,6 +121,11 @@ class KVLease(_Sequence):
         self._pages: List[int] = []
         # logical page idx → prefix-index key, published once filled
         self._pending_publish: Dict[int, object] = {}
+        # True while every page is provably private: sole reference, held
+        # under this lease's own pool id, unpublished.  Any path that can
+        # share a page (prefix attach, publication, fork) clears it; the
+        # release fast path keys off it.
+        self._clean = True
 
     # -- sequence protocol (legacy page-list compatibility) -----------------
     def __len__(self) -> int:
@@ -237,6 +242,14 @@ class MemoryPlane:
         self._prefix_index: Dict[object, int] = {}   # key → physical page
         self._cache: 'OrderedDict[int, None]' = OrderedDict()  # zero-ref LRU
         self._block_seq = 0
+        # husks of cleanly-released leases, reused by the next admit (the
+        # session-alloc fast path: admit/release cycles on the serving hot
+        # path stop paying object construction).  Only leases released
+        # through the notifying path are pooled — an invalidation-released
+        # lease may still be referenced by its framework request record
+        # (e.g. a queued victim awaiting re-admission), and recycling it
+        # would alias two requests onto one handle.
+        self._lease_pool: List[KVLease] = []
 
     @classmethod
     def of(cls, pool: KVPool) -> 'MemoryPlane':
@@ -384,6 +397,19 @@ class MemoryPlane:
     # ------------------------------------------------------------------
     # Lease lifecycle
     # ------------------------------------------------------------------
+    def _new_lease(self, lease_id: str, klass: str, scope: str) -> KVLease:
+        if self._lease_pool:
+            lease = self._lease_pool.pop()
+            lease.lease_id = lease_id
+            lease.klass = klass
+            lease.scope = scope
+            lease.filled = 0
+            lease.released = False
+            lease._clean = True
+            # _pages / _pending_publish were emptied at release
+            return lease
+        return KVLease(self, lease_id, klass, scope)
+
     def get(self, lease_id: str) -> Optional[KVLease]:
         return self.leases.get(lease_id)
 
@@ -410,8 +436,31 @@ class MemoryPlane:
                 return None
             return lease
 
+        if prompt is None or not self.sharing:
+            # session-alloc fast path: no prefix index to consult, so the
+            # whole admit is one pool alloc plus inline page tracking
+            got = self.pool.alloc(lease_id, n_pages, klass) \
+                if n_pages > 0 else []
+            if got is None and self._cache:
+                self._evict_cached(klass, n_pages)
+                got = self.pool.alloc(lease_id, n_pages, klass)
+            if got is None:
+                self.stats.admit_failures += 1
+                return None
+            lease = self._new_lease(lease_id, klass, scope or klass)
+            owners, index = self._page_owner, self._page_index
+            users = self._page_users
+            for i, page in enumerate(got):
+                owners[page] = lease_id
+                index[page] = i
+                users[page] = {lease_id}
+            lease._pages.extend(got)
+            self.leases[lease_id] = lease
+            self.stats.leases_opened += 1
+            return lease
+
         scope = scope or klass
-        lease = KVLease(self, lease_id, klass, scope)
+        lease = self._new_lease(lease_id, klass, scope)
         pg = self.pool.page_size
         # 1. attach the published shared prefix (contiguous from page 0);
         #    a hash hit alone is not trusted — the page's published tokens
@@ -426,6 +475,10 @@ class MemoryPlane:
             self._attach(page, lease_id)
             lease._pages.append(page)
         shared = len(lease._pages)
+        if keys:
+            # attached pages and/or pending publications → pages of this
+            # lease may gain outside references; no release fast path
+            lease._clean = False
         # 2. allocate the private tail under the lease's own id
         n_priv = n_pages - shared
         got = self._pool_alloc(lease_id, n_priv, klass, grow=False) \
@@ -434,6 +487,10 @@ class MemoryPlane:
             for idx in range(shared - 1, -1, -1):   # roll the attach back
                 self._deref(lease._pages[idx], lease_id)
             self.stats.admit_failures += 1
+            del lease._pages[:]                     # recycle the husk
+            lease.released = True
+            if len(self._lease_pool) < 64:
+                self._lease_pool.append(lease)
             return None
         for i, page in enumerate(got):
             self._track(page, lease_id, shared + i, lease_id)
@@ -474,8 +531,10 @@ class MemoryPlane:
         assert new_id not in self.leases, f'lease id {new_id!r} live'
         pg = self.pool.page_size
         n_pages = n_pages if n_pages is not None else len(parent._pages)
-        child = KVLease(self, new_id, parent.klass, parent.scope)
+        child = self._new_lease(new_id, parent.klass, parent.scope)
         n_share = min(parent.filled // pg, len(parent._pages), n_pages)
+        if n_share:
+            parent._clean = child._clean = False
         for idx in range(n_share):
             self._attach(parent._pages[idx], new_id)
             child._pages.append(parent._pages[idx])
@@ -517,6 +576,32 @@ class MemoryPlane:
         if lease.released:
             return
         lease.released = True
+        lid = lease.lease_id
+        # Fast path — the hot serving shape: ``_clean`` proves every page
+        # is private (sole reference, held under this lease's own pool id,
+        # unpublished — sharing requires publication or a fork, both of
+        # which clear the flag), so release is one bulk pool free plus
+        # three dict deletes per page: no per-page retention checks, no
+        # drop batching, no survivor transfer.
+        if lease._clean:
+            pages = lease._pages
+            if pages:
+                self.pool.free(lid)
+                owners, index = self._page_owner, self._page_index
+                users = self._page_users
+                for p in pages:
+                    del owners[p]
+                    del index[p]
+                    del users[p]
+                del pages[:]
+            self.leases.pop(lid, None)
+            self.stats.releases += 1
+            if notify:
+                if len(self._lease_pool) < 64:
+                    self._lease_pool.append(lease)
+                if self.on_release is not None:
+                    self.on_release(lid)
+            return
         drops: Dict[str, List[int]] = {}
         for page in reversed(lease._pages):
             self._deref(page, lease.lease_id, drops)
@@ -535,8 +620,11 @@ class MemoryPlane:
             for p in self.pool.pages_of[block]:
                 self._page_owner[p] = block
         self.stats.releases += 1
-        if notify and self.on_release is not None:
-            self.on_release(lease.lease_id)
+        if notify:
+            if len(self._lease_pool) < 64:
+                self._lease_pool.append(lease)
+            if self.on_release is not None:
+                self.on_release(lease.lease_id)
 
     def release_id(self, lease_id: str) -> None:
         lease = self.leases.get(lease_id)

@@ -197,6 +197,14 @@ class ValveRuntime:
             self._legacy_sessions[klass] = sess
         return sess
 
+    def _legacy_alloc(self, klass: str, req_id: str, n_pages: int
+                      ) -> Optional[KVLease]:
+        """Shim fast path: jump straight to the session internals instead
+        of re-entering through ``ValveSession.alloc`` (the shims used to
+        pay the public wrapper a second time on every call)."""
+        sess = self._legacy_sessions.get(klass) or self._legacy_session(klass)
+        return self._session_alloc(sess, req_id, n_pages)
+
     # ------------------------------------------------------------------
     # Invalidation fan-out: one reclamation's {req: pages} is split by the
     # OWNING SESSION (allocation records ownership, so same-class engines
@@ -295,29 +303,34 @@ class ValveRuntime:
                        scope=None) -> Optional[KVLease]:
         got = self.memory.admit(req_id, n_pages, 'offline',
                                 prompt=prompt, scope=scope)
-        if got is not None:
+        if got is not None and len(got._pages) > 0:
+            # one recency note per distinct handle (pages cluster, so the
+            # set is tiny) instead of one per page
             now = self.clock.now()
-            for p in got:
-                self.reclaimer.note_handle_use(self.pool.handle_of(p), now)
+            handle_of = self.pool.handle_of
+            for h in {handle_of(p) for p in got._pages}:
+                self.reclaimer.note_handle_use(h, now)
         return got
 
     def alloc_online(self, req_id: str, n_pages: int) -> Optional[KVLease]:
         """DEPRECATED — use ``open_session('online').alloc`` instead.
         Returns the hidden lease (list-like: iterates as the page ids)."""
-        return self._legacy_session('online').alloc(req_id, n_pages)
+        return self._legacy_alloc('online', req_id, n_pages)
 
     def free_online(self, req_id: str) -> None:
         """DEPRECATED — use the owning session's ``free``/``finish``."""
-        self._legacy_session('online').free(req_id)
+        self.memory.release_id(req_id)
+        self._owner.pop(req_id, None)
 
     def alloc_offline(self, req_id: str, n_pages: int) -> Optional[KVLease]:
         """DEPRECATED — use ``open_session('offline').alloc`` instead.
         Returns the hidden lease (list-like: iterates as the page ids)."""
-        return self._legacy_session('offline').alloc(req_id, n_pages)
+        return self._legacy_alloc('offline', req_id, n_pages)
 
     def free_offline(self, req_id: str) -> None:
         """DEPRECATED — use the owning session's ``free``/``finish``."""
-        self._legacy_session('offline').free(req_id)
+        self.memory.release_id(req_id)
+        self._owner.pop(req_id, None)
 
     def _with_gates_closed_reclaim(self, n_handles: int, now: float
                                    ) -> Dict[str, List[int]]:

@@ -44,6 +44,7 @@ __all__ = [
     'ceil_div', 'round_up', 'pick_block', 'pad_axis_to',
     'online_softmax_init', 'online_softmax_update', 'online_softmax_finalize',
     'block_positions', 'mask_block_scores',
+    'hash_u32', 'gumbel_hash_noise',
 ]
 
 # Softmax mask fill value: large-negative but finite in f32, so a fully
@@ -214,6 +215,49 @@ def online_softmax_finalize(acc, l):
     """acc / l with fully-masked rows (l == 0) mapped to 0, not NaN."""
     safe = jnp.where(l == 0.0, 1.0, l)
     return acc / safe[:, None]
+
+
+# ---------------------------------------------------------------------------
+# Counter-based sampling noise (shared by the fused sampling kernel and its
+# jnp reference so kernel-vs-ref parity is bit-identical)
+# ---------------------------------------------------------------------------
+
+def hash_u32(x):
+    """Stateless u32 avalanche hash (splitmix-style finalizer).
+
+    Pure element-wise integer ops, so it lowers identically inside a Pallas
+    kernel and in plain jnp — the property the fused-sampling parity suite
+    relies on.  Input is cast to uint32; multiplication wraps mod 2**32.
+    """
+    x = jnp.asarray(x).astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def gumbel_hash_noise(seed, rows, cols):
+    """Deterministic Gumbel(0, 1) noise per (row, col) counter.
+
+    ``argmax(logits / T + gumbel)`` is an exact sample from
+    ``softmax(logits / T)`` (the Gumbel-max trick), so the fused sampling
+    kernel can carry temperature sampling as a pure argmax reduction — no
+    cumulative-sum search, no logits round-trip.  The noise is a counter
+    hash (seed, row, col), not a stream: any tile of the (B, V) grid can be
+    generated independently inside its kernel block and matches the jnp
+    reference bit-for-bit.
+    """
+    seed = jnp.asarray(seed).astype(jnp.uint32)
+    h = hash_u32(seed ^ (jnp.asarray(rows).astype(jnp.uint32)
+                         * jnp.uint32(0x9E3779B9)))
+    bits = hash_u32(h ^ jnp.asarray(cols).astype(jnp.uint32))
+    # top 24 bits → uniform on the open interval (0, 1): representable
+    # exactly in f32, never 0 or 1, so the double log below stays finite
+    u = ((bits >> jnp.uint32(8)).astype(jnp.float32)
+         * jnp.float32(2.0 ** -24) + jnp.float32(2.0 ** -25))
+    return -jnp.log(-jnp.log(u))
 
 
 # ---------------------------------------------------------------------------

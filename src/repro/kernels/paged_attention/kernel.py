@@ -102,3 +102,173 @@ def paged_attention_bhgd(q, pool_k, pool_v, page_table, lengths, *,
         interpret=interpret,
     )(page_table, lengths, q, pool_k, pool_v)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Prefix-shared-aware variant: two online-softmax phases merged through the
+# associativity of the running (m, l, acc) state.  Phase 1 streams each
+# DEDUPED shared physical page once and scores it against the whole batch's
+# queries (per-row participation mask); phase 2 is the stock per-request
+# page walk over the tails, seeded from phase 1's partial state instead of
+# the (−inf, 0, 0) init.  Inputs come from
+# :func:`repro.kernels.paged_attention.prefix.build_shared_runs`.
+# ---------------------------------------------------------------------------
+
+def _shared_run_kernel(shared_pages_ref, share_pos_ref, q_ref, k_ref, v_ref,
+                       mask_ref, m_out_ref, l_out_ref, acc_out_ref,
+                       m_ref, l_ref, acc_ref, *, page_size: int,
+                       scale: float):
+    js = pl.program_id(1)
+    ns = pl.num_programs(1)
+
+    @pl.when(js == 0)
+    def _init():
+        kc.online_softmax_init(m_ref, l_ref, acc_ref)
+
+    q = q_ref[:, 0].astype(jnp.float32)               # (B, G, D)
+    b, g, d = q.shape
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (pg, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q.reshape(b * g, d), k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # participation mask: rows not sharing this slot (and quarantine
+    # padding slots) score NEG_INF.  A row masked at every slot so far
+    # carries garbage mass at m = NEG_INF; the first finite score — here
+    # or in the tail phase — rescales it away (alpha = exp(-inf) = 0), so
+    # no explicit reset is needed.  Shared pages are fully filled by the
+    # publication contract, so no kv_len mask applies in this phase.
+    ok = jnp.repeat(mask_ref[:, 0] > 0, g)            # (B*G,)
+    s = jnp.where(ok[:, None], s, kc.NEG_INF)
+
+    m_ref[...], l_ref[...], acc_ref[...] = kc.online_softmax_update(
+        s, v, m_ref[...], l_ref[...], acc_ref[...])
+
+    @pl.when(js == ns - 1)
+    def _flush():
+        m_out_ref[:, 0] = m_ref[...].reshape(b, g)
+        l_out_ref[:, 0] = l_ref[...].reshape(b, g)
+        acc_out_ref[:, 0] = acc_ref[...].reshape(b, g, d)
+
+
+def _tail_kernel(tail_pt_ref, start_ref, lengths_ref, q_ref, k_ref, v_ref,
+                 m0_ref, l0_ref, acc0_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 page_size: int, scale: float):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        # resume the online softmax from the shared-run partial state
+        m_ref[...] = m0_ref[0, 0]
+        l_ref[...] = l0_ref[0, 0]
+        acc_ref[...] = acc0_ref[0, 0]
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (pg, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # tail pages sit AFTER the row's shared run: shift by start_pages
+    pos = kc.block_positions(start_ref[b] + ip, page_size, s.shape, 1)
+    s = kc.mask_block_scores(s, k_pos=pos, kv_len=lengths_ref[b])
+
+    m_ref[...], l_ref[...], acc_ref[...] = kc.online_softmax_update(
+        s, v, m_ref[...], l_ref[...], acc_ref[...])
+
+    @pl.when(ip == np_ - 1)
+    def _flush():
+        o_ref[0, 0] = kc.online_softmax_finalize(
+            acc_ref[...], l_ref[...]).astype(o_ref.dtype)
+
+
+def paged_attention_prefix_shared_bhgd(q, pool_k, pool_v, shared_pages,
+                                       share_pos, share_mask, tail_pt,
+                                       start_pages, lengths, *,
+                                       scale: Optional[float] = None,
+                                       interpret: Optional[bool] = None):
+    """q: (B, Hkv, G, D); pools: (P, pg, Hkv, D); shared_pages/share_pos:
+    (S,); share_mask: (B, S) f32; tail_pt: (B, maxp); start_pages,
+    lengths: (B,).  See ``prefix.build_shared_runs`` for the structure."""
+    b, hkv, g, d = q.shape
+    pg = pool_k.shape[1]
+    n_slots = shared_pages.shape[0]
+    maxp = tail_pt.shape[1]
+    scale = d ** -0.5 if scale is None else scale
+    interpret = kc.resolve_interpret(interpret)
+
+    # phase 1: grid (Hkv, S) — each shared physical page streams HBM→VMEM
+    # exactly once per kv-head for the WHOLE batch
+    shared_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(hkv, n_slots),
+        in_specs=[
+            pl.BlockSpec((b, 1, g, d), lambda ih, js, sp, spos: (0, ih, 0, 0)),
+            pl.BlockSpec((1, pg, 1, d),
+                         lambda ih, js, sp, spos: (sp[js], 0, ih, 0)),
+            pl.BlockSpec((1, pg, 1, d),
+                         lambda ih, js, sp, spos: (sp[js], 0, ih, 0)),
+            pl.BlockSpec((b, 1), lambda ih, js, sp, spos: (0, js)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 1, g), lambda ih, js, sp, spos: (0, ih, 0)),
+            pl.BlockSpec((b, 1, g), lambda ih, js, sp, spos: (0, ih, 0)),
+            pl.BlockSpec((b, 1, g, d), lambda ih, js, sp, spos: (0, ih, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b * g,), jnp.float32),
+            pltpu.VMEM((b * g,), jnp.float32),
+            pltpu.VMEM((b * g, d), jnp.float32),
+        ],
+    )
+    m0, l0, acc0 = pl.pallas_call(
+        functools.partial(_shared_run_kernel, page_size=pg, scale=scale),
+        grid_spec=shared_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+        ],
+        compiler_params=kc.compiler_params(
+            dimension_semantics=('parallel', 'arbitrary')),
+        interpret=interpret,
+    )(shared_pages, share_pos, q, pool_k, pool_v, share_mask)
+
+    # phase 2: the stock per-request page walk over the tails, resuming
+    # from phase 1's partial (m, l, acc)
+    tail_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, maxp),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda ib, ih, ip, pt, st, ln: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, pg, 1, d),
+                         lambda ib, ih, ip, pt, st, ln: (pt[ib, ip], 0, ih, 0)),
+            pl.BlockSpec((1, pg, 1, d),
+                         lambda ib, ih, ip, pt, st, ln: (pt[ib, ip], 0, ih, 0)),
+            pl.BlockSpec((1, 1, g),
+                         lambda ib, ih, ip, pt, st, ln: (ib, ih, 0)),
+            pl.BlockSpec((1, 1, g),
+                         lambda ib, ih, ip, pt, st, ln: (ib, ih, 0)),
+            pl.BlockSpec((1, 1, g, d),
+                         lambda ib, ih, ip, pt, st, ln: (ib, ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda ib, ih, ip, pt, st, ln: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_tail_kernel, page_size=pg, scale=scale),
+        grid_spec=tail_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        compiler_params=kc.compiler_params(
+            dimension_semantics=('parallel', 'parallel', 'arbitrary')),
+        interpret=interpret,
+    )(tail_pt, start_pages, lengths, q, pool_k, pool_v, m0, l0, acc0)
+    return out

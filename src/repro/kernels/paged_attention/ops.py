@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import common as kc
-from repro.kernels.paged_attention.kernel import paged_attention_bhgd
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_bhgd, paged_attention_prefix_shared_bhgd)
 
 
 @functools.partial(jax.jit, static_argnames=('scale', 'interpret'))
@@ -65,3 +66,79 @@ def paged_attention_decode(q, pool_k, pool_v, page_table, lengths, *,
     return paged_attention(q, pool_k, pool_v, page_table, lengths,
                            scale=scale,
                            interpret=kc.resolve_interpret(interpret))
+
+
+def paged_attention_prefix_shared(q, pool_k, pool_v, shared_pages, share_pos,
+                                  share_mask, tail_pt, start_pages, lengths,
+                                  *, scale: Optional[float] = None,
+                                  backend: Optional[str] = None,
+                                  interpret: Optional[bool] = None):
+    """Prefix-shared-aware decode attention.
+
+    When the memory plane's copy-on-write sharing points several requests at
+    the same physical prefix pages, the stock kernel still reads each page
+    once *per request*.  This variant takes the deduplicated shared-run
+    structure (``prefix.build_shared_runs``) and reads each shared physical
+    page once *per batch*: a batch-wide shared-run pass (per-request
+    participation masking — the quarantine-mask machinery applied to
+    sharing) feeds its partial online-softmax state into the stock tail
+    walk.  Output matches ``paged_attention_decode`` on the original
+    undeduplicated tables.
+
+    q: (B, Hq, D); pools: (P, pg, Hkv, D) — global paged layout only (the
+    shared-run indirection is not SPMD-partitionable, like the stock
+    kernel).  ``backend=None`` auto-selects the Pallas two-phase kernel on
+    TPU and the jnp reference elsewhere (the reference performs the same
+    dedup, so the bandwidth win is real off-TPU too).
+    """
+    assert pool_k.ndim == 4, 'prefix-shared attention needs the global pool'
+    if backend is None:
+        backend = 'pallas' if jax.default_backend() == 'tpu' else 'ref'
+    from repro.kernels.paged_attention.prefix import prefix_shared_ref
+    if backend == 'ref':
+        return prefix_shared_ref(q, pool_k, pool_v, shared_pages, share_pos,
+                                 share_mask, tail_pt, start_pages, lengths,
+                                 scale=scale)
+    assert backend == 'pallas', backend
+    b, hq, d = q.shape
+    hkv = pool_k.shape[2]
+    qg = q.reshape(b, hkv, hq // hkv, d)
+    out = paged_attention_prefix_shared_bhgd(
+        qg, pool_k, pool_v, shared_pages.astype(jnp.int32),
+        share_pos.astype(jnp.int32), share_mask.astype(jnp.float32),
+        tail_pt.astype(jnp.int32), start_pages.astype(jnp.int32),
+        lengths.astype(jnp.int32), scale=scale,
+        interpret=kc.resolve_interpret(interpret))
+    return out.reshape(b, hq, d)
+
+
+def paged_attention_decode_sample(q, pool_k, pool_v, page_table, lengths,
+                                  wo, final_norm, unembed, *,
+                                  norm_eps: float = 1e-6,
+                                  temperature: float = 0.0, seed=0,
+                                  scale: Optional[float] = None,
+                                  backend: Optional[str] = None,
+                                  interpret: Optional[bool] = None):
+    """Decode attention with the sampling tail fused in — the composed
+    single-layer form of the engine's fused decode step.
+
+    Runs :func:`paged_attention_decode`, applies the decode head (output
+    projection ``wo`` (Hq·D, d_model), residual-free final RMS norm, then
+    the fused unembed+argmax kernel), and returns (B,) int32 sampled
+    tokens.  The (B, V) logits tensor never exists in HBM: the unembed
+    matmul is tiled over vocab inside the sampling kernel and reduced to a
+    running argmax in VMEM (``kernels.sampling``).
+
+    The full model fuses the same tail after its layer scan
+    (``models.dense.decode_step_sample``); this entry point is the
+    kernel-level composition the parity suite pins against the reference
+    ops, single attention layer end-to-end.
+    """
+    from repro.kernels.sampling.ops import fused_unembed_sample
+    from repro.models.common import rms_norm
+    out = paged_attention_decode(q, pool_k, pool_v, page_table, lengths,
+                                 scale=scale, interpret=interpret)
+    last = out.reshape(out.shape[0], -1) @ wo
+    last = rms_norm(last, final_norm, norm_eps)
+    return fused_unembed_sample(last, unembed, seed, temperature=temperature,
+                                backend=backend, interpret=interpret)

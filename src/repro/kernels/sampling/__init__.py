@@ -1,0 +1,1 @@
+from repro.kernels.sampling.ops import fused_unembed_sample  # noqa: F401

@@ -1,0 +1,41 @@
+"""Dispatch wrapper for the fused unembed+sample tail.
+
+``backend=None`` auto-selects: the Pallas kernel on TPU, the jnp reference
+everywhere else (bit-identical math; the interpreter would only slow
+CPU/GPU runs down — same policy as ``EngineConfig.decode_kernel``).  Tests
+pin ``backend='pallas', interpret=True`` to exercise the real kernel under
+the interpreter.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sampling.kernel import unembed_sample_pallas
+from repro.kernels.sampling.ref import unembed_sample_ref
+
+
+def fused_unembed_sample(last, unembed, seed=0, *, temperature: float = 0.0,
+                         block_v: Optional[int] = None,
+                         backend: Optional[str] = None,
+                         interpret: Optional[bool] = None):
+    """Sample one token per row from ``softmax(last @ unembed / T)``.
+
+    last: (B, D) final-norm hidden state; unembed: (D, V); seed: int or
+    int32 array (ignored at temperature 0).  Returns (B,) int32 tokens.
+    Greedy (T=0) is bit-identical to ``argmax(last @ unembed)``; T>0 is an
+    exact categorical sample via the Gumbel-max trick with counter-hash
+    noise, reproducible across backends.
+    """
+    if backend is None:
+        backend = 'pallas' if jax.default_backend() == 'tpu' else 'ref'
+    if backend == 'ref':
+        return unembed_sample_ref(last, unembed, seed,
+                                  temperature=temperature)
+    assert backend == 'pallas', backend
+    seed_arr = jnp.asarray(seed, jnp.int32).reshape(-1)[:1]
+    return unembed_sample_pallas(last, unembed, seed_arr,
+                                 temperature=temperature, block_v=block_v,
+                                 interpret=interpret)

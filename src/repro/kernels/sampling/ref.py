@@ -1,0 +1,34 @@
+"""jnp reference for the fused unembed+sample kernel.
+
+Two jobs:
+
+- **Parity oracle**: same math, same counter-hash Gumbel noise
+  (``kernels.common.gumbel_hash_noise``), so kernel-vs-ref token parity is
+  bit-identical — no tolerance window hiding an off-by-one in the argmax
+  tie-break.
+- **Off-TPU fast path**: on CPU/GPU the engine dispatches here instead of
+  running the kernel under the Pallas interpreter (same policy as the
+  paged decode kernel — the interpreter would only slow non-TPU runs
+  down).  The greedy branch is deliberately the *exact* computation the
+  unfused engine path performs (native-dtype matmul, ``jnp.argmax``), which
+  is what makes the fused/unfused drain bit-identity test meaningful.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common as kc
+
+
+def unembed_sample_ref(last, unembed, seed=0, *, temperature: float = 0.0):
+    """last: (B, D); unembed: (D, V); returns (B,) int32 sampled tokens."""
+    logits = last @ unembed                     # native dtype, as the
+    if temperature > 0.0:                       # unfused engine path does
+        b, v = logits.shape
+        row = jax.lax.broadcasted_iota(jnp.int32, (b, v), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (b, v), 1)
+        seed = jnp.asarray(seed, jnp.int32).reshape(-1)[0]
+        logits = (logits.astype(jnp.float32) / temperature
+                  + kc.gumbel_hash_noise(seed, row, col))
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -77,6 +77,21 @@ class Model:
                                         use_pallas=use_pallas)
         return self.mod.decode_step(self.cfg, params, cache, batch)
 
+    def decode_sample_fn(self, params, cache, batch, *, use_pallas=False,
+                         temperature=0.0):
+        """Fused decode+sampling step: (cache, (B,) int32 tokens).
+
+        The engine's ``fused_sampling`` fast path — logits never leave the
+        device (see ``models.dense.decode_step_sample``).  Dense-family
+        models only; other families keep the logits-returning
+        :meth:`decode_fn` + sampler composition.
+        """
+        assert self.cfg.family in ('dense', 'vlm'), \
+            f'fused sampling not implemented for family {self.cfg.family!r}'
+        return dense.decode_step_sample(self.cfg, params, cache, batch,
+                                        use_pallas=use_pallas,
+                                        temperature=temperature)
+
     # -------------------------------------------------------- caches
     def cache_template(self, shape: ShapeConfig, *, engine_pages: Optional[int] = None):
         """Cache PSpec tree for an execution shape.

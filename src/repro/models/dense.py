@@ -144,8 +144,16 @@ def self_attn_prefill(cfg: ModelConfig, lp, x, positions, pool_k, pool_v,
 
 
 def self_attn_decode(cfg: ModelConfig, lp, x, positions, pool_k, pool_v,
-                     page_table, *, use_pallas: bool = False):
-    """x: (B, 1, D); positions: (B,) index of the new token."""
+                     page_table, *, use_pallas: bool = False, shared=None):
+    """x: (B, 1, D); positions: (B,) index of the new token.
+
+    ``shared`` (optional) is the deduplicated shared-prefix run structure
+    from ``kernels.paged_attention.prefix.build_shared_runs``: when the
+    engine's decode batch holds copy-on-write shared prefixes, attention
+    reads each shared physical page once per batch instead of once per
+    request (the original per-request ``page_table`` is still what the KV
+    *write* above indexes — only the read path is deduplicated).
+    """
     b = x.shape[0]
     pg = pool_k.shape[-3]   # page size (layout-agnostic: global 4-D / region 5-D)
     q, k, v = qkv_proj(cfg, lp, x, positions[:, None])
@@ -154,7 +162,14 @@ def self_attn_decode(cfg: ModelConfig, lp, x, positions, pool_k, pool_v,
     offs = positions % pg
     pool_k = cm.kv_write_token(pool_k, page_idx, offs, k[:, 0])
     pool_v = cm.kv_write_token(pool_v, page_idx, offs, v[:, 0])
-    if use_pallas:
+    if shared is not None:
+        from repro.kernels.paged_attention.ops import (
+            paged_attention_prefix_shared)
+        out = paged_attention_prefix_shared(
+            q[:, 0], pool_k, pool_v, shared['pages'], shared['pos'],
+            shared['mask'], shared['tail_pt'], shared['start'],
+            positions + 1)
+    elif use_pallas:
         # decode hot path: pages stream HBM→VMEM through the page table
         # instead of gathering the full (B, maxp·pg, Hkv, Dh) KV (the
         # oracle path below); falls back to the ref for the region layout
@@ -171,7 +186,7 @@ def self_attn_decode(cfg: ModelConfig, lp, x, positions, pool_k, pool_v,
 
 def layer_apply(cfg: ModelConfig, lp, h, positions, mode: str,
                 cache_l: Optional[Dict[str, jax.Array]] = None,
-                page_table=None, use_pallas: bool = False):
+                page_table=None, use_pallas: bool = False, shared=None):
     x = cm.rms_norm(h, lp['ln1'], cfg.norm_eps)
     new_cache_l = cache_l
     if mode == 'train':
@@ -184,7 +199,7 @@ def layer_apply(cfg: ModelConfig, lp, h, positions, mode: str,
     elif mode == 'decode':
         attn_out, pk, pv = self_attn_decode(
             cfg, lp, x, positions, cache_l['k'], cache_l['v'], page_table,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, shared=shared)
         new_cache_l = {'k': pk, 'v': pv}
     else:
         raise ValueError(mode)
@@ -198,12 +213,12 @@ def layer_apply(cfg: ModelConfig, lp, h, positions, mode: str,
 
 def scan_layers(cfg: ModelConfig, layers, h, positions, mode: str,
                 cache=None, page_table=None, remat: bool = True,
-                use_pallas: bool = False):
+                use_pallas: bool = False, shared=None):
     def body(carry, xs):
         lp, cache_l = xs
         out, new_cache_l = layer_apply(cfg, lp, carry, positions, mode,
                                        cache_l, page_table,
-                                       use_pallas=use_pallas)
+                                       use_pallas=use_pallas, shared=shared)
         return out, new_cache_l
 
     if remat and mode == 'train':
@@ -314,10 +329,39 @@ def decode_step(cfg: ModelConfig, params, cache, batch, *,
     h = constrain(h, ('batch', 'seq', 'embed'))
     h, cache = scan_layers(cfg, params['layers'], h, positions, 'decode',
                            cache=cache, page_table=batch['page_table'],
-                           remat=False, use_pallas=use_pallas)
+                           remat=False, use_pallas=use_pallas,
+                           shared=batch.get('shared'))
     last = cm.rms_norm(h[:, 0], params['final_norm'], cfg.norm_eps)
     logits = last @ unembed_of(cfg, params)
     return cache, constrain(logits, ('batch', 'vocab'))
+
+
+def decode_step_sample(cfg: ModelConfig, params, cache, batch, *,
+                       use_pallas: bool = False, temperature: float = 0.0):
+    """``decode_step`` with the sampling tail fused into the unembed.
+
+    Instead of returning (B, V) logits for a separate sampling dispatch,
+    the final-norm hidden goes straight into the fused unembed+argmax
+    reduction (``kernels.sampling``) and (cache, (B,) int32 tokens) comes
+    back — logits never materialize in HBM and the engine can keep the
+    sampled token on device for the next iteration.  Greedy output is
+    bit-identical to ``argmax`` over ``decode_step``'s logits; temperature
+    sampling uses counter-hash Gumbel noise seeded by ``batch['seed']``.
+    """
+    tokens = batch['tokens']            # (B,)
+    positions = batch['positions']      # (B,) index of the new token
+    h = params['embed'][tokens][:, None, :]
+    h = constrain(h, ('batch', 'seq', 'embed'))
+    h, cache = scan_layers(cfg, params['layers'], h, positions, 'decode',
+                           cache=cache, page_table=batch['page_table'],
+                           remat=False, use_pallas=use_pallas,
+                           shared=batch.get('shared'))
+    last = cm.rms_norm(h[:, 0], params['final_norm'], cfg.norm_eps)
+    from repro.kernels.sampling.ops import fused_unembed_sample
+    toks = fused_unembed_sample(last, unembed_of(cfg, params),
+                                batch.get('seed', 0),
+                                temperature=temperature)
+    return cache, toks
 
 
 # ---------------------------------------------------------------------------

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.api import PoolSession
 from repro.core.clock import RealClock
+from repro.kernels.paged_attention.prefix import build_shared_runs
 from repro.serving.kvpool import QUARANTINE_PAGE
 from repro.serving.sampler import sample
 from repro.serving.scheduler import (
@@ -46,6 +47,19 @@ from repro.serving.scheduler import (
 
 # re-exported for compatibility: request bookkeeping moved to scheduler.py
 __all__ = ['Engine', 'EngineConfig', 'EngineStats', 'Request', 'ReqState']
+
+# jaxlib 0.4.3x CPU async dispatch intermittently corrupts the fused
+# lazy-token chain (sampled tokens feeding the next dispatch on-device with
+# no host sync in between) when host-side scheduling runs concurrently with
+# an executing dispatch.  The flag is read once, when the CPU client is
+# created, so it must be set at import time — any realistic flow imports
+# this module before touching jax.  ``Engine._dispatch_decode`` additionally
+# blocks on each fused step's tokens as a backstop for processes whose
+# client predates this import.  TPU/GPU are unaffected by either.
+try:
+    jax.config.update('jax_cpu_enable_async_dispatch', False)
+except AttributeError:          # flag absent on this jax version
+    pass
 
 
 @dataclass
@@ -66,6 +80,19 @@ class EngineConfig:
     # None → auto: kernel on TPU, oracle elsewhere (the interpreter would
     # only slow CPU runs down; parity is covered by the kernel test suite).
     decode_kernel: Optional[bool] = None
+    # Fused decode+sampling fast path: the decode dispatch returns sampled
+    # (B,) tokens instead of (B, V) logits (fused unembed+argmax — logits
+    # never round-trip to HBM), tokens stay on device between decode
+    # iterations (no per-step host sync; values are fetched lazily for
+    # stream emission via Engine.flush_tokens / output_tokens), and the KV
+    # cache is donated to the jitted step on accelerator backends.  Greedy
+    # drain output is bit-identical to the unfused path.  With eos_token
+    # set, tokens are fetched every step (the stop check needs the value).
+    fused_sampling: bool = False
+    # Deduplicate copy-on-write shared prefix pages across each decode
+    # batch (kernels.paged_attention.prefix): each shared physical page is
+    # read once per batch instead of once per request.
+    prefix_shared_attention: bool = False
 
     def scheduler_config(self) -> SchedulerConfig:
         return SchedulerConfig(
@@ -88,6 +115,8 @@ class EngineStats:
     blocked_dispatches: int = 0     # offline dispatches skipped while gated
     spills: int = 0                 # surviving prefixes dropped under pressure
     cancellations: int = 0          # requests abandoned before finishing
+    token_flushes: int = 0          # lazy device→host token syncs (fused path)
+    shared_page_reads_saved: int = 0  # page reads deduped by prefix sharing
 
 
 class Engine:
@@ -132,13 +161,46 @@ class Engine:
         decode_kernel = self.cfg.decode_kernel
         if decode_kernel is None:
             decode_kernel = jax.default_backend() == 'tpu'
+        # donate the KV cache buffers to the jitted step so the pools
+        # update in place (donation is a no-op on CPU and would only warn)
+        donate = (1,) if jax.default_backend() in ('tpu', 'gpu') else ()
         self._decode = jax.jit(
             lambda p, c, b, k=decode_kernel: model.decode_fn(
-                p, c, b, use_pallas=k))
+                p, c, b, use_pallas=k),
+            donate_argnums=donate)
+        if self.cfg.fused_sampling:
+            temp = float(self.cfg.temperature)
+
+            def fused_fn(p, c, b, k=decode_kernel, t=temp):
+                # next-token feed: rows whose last sampled token is still
+                # on device read it straight from the previous dispatch's
+                # output instead of a host-staged value
+                db = dict(b)
+                db['tokens'] = jnp.where(db.pop('use_prev') > 0,
+                                         db.pop('prev')[db.pop('src')],
+                                         db['tokens'])
+                return model.decode_sample_fn(p, c, db, use_pallas=k,
+                                              temperature=t)
+            self._fused_decode = jax.jit(fused_fn, donate_argnums=donate)
+            # see the module-import async-dispatch note at the top of this
+            # file; the per-step block below is the backstop for processes
+            # whose CPU client predates that config update
+            self._cpu_step_sync = jax.default_backend() == 'cpu'
         chunk_fn = model.mod.prefill_chunk
         self._mixed = jax.jit(
             lambda p, c, b: chunk_fn(self.mcfg, p, c, b))
         self._init_buffers()
+        # lazy-token bookkeeping (fused path): device arrays whose values
+        # have not been copied to req.generated yet, and the row map of
+        # the newest decode output (the device-feed source)
+        self._pending: List[tuple] = []
+        # staged-device-array cache for decode dispatch inputs (see
+        # _dispatch_decode): keyed by the exact host bytes they derive from
+        self._stage: Dict = {}
+        self._pending_rids: set = set()
+        self._prev_tokens = jnp.zeros((self.cfg.max_batch,), jnp.int32)
+        self._prev_rows: Dict[str, int] = {}
+        self._seed_ctr = itertools.count()
 
     def _init_buffers(self) -> None:
         """Preallocate the fixed-shape host staging buffers (one mixed
@@ -158,6 +220,9 @@ class Engine:
             'toks': np.zeros((b,), np.int32),
             'poss': np.zeros((b,), np.int32),
             'pts': np.zeros((b, self.maxp), np.int32),
+            # fused path: per-row device-feed selectors (see fused_fn)
+            'use_prev': np.zeros((b,), np.int32),
+            'src': np.zeros((b,), np.int32),
         }
 
     # ------------------------------------------------------------------
@@ -287,6 +352,11 @@ class Engine:
         prefill rows write/attend their chunk; decode rows are one-token
         chunks (embed the last sampled token, write its KV, predict the
         next) — one fixed (max_batch × chunk) iteration for all of it."""
+        # prefill rows (and piggybacked decode rows) re-read context token
+        # VALUES, so lazily-held device tokens must land first; the
+        # newest-output row map dies with this dispatch (rows resample)
+        self.flush_tokens()
+        self._prev_rows = {}
         m = self._mix
         m['toks'].fill(0)
         m['poss'].fill(0)
@@ -361,36 +431,178 @@ class Engine:
 
     # -- pure decode dispatch -------------------------------------------------
     def _dispatch_decode(self, slots: List[DecodeSlot]) -> None:
-        """Decode-only iteration through the paged-attention fast path."""
+        """Decode-only iteration through the paged-attention fast path.
+
+        With ``fused_sampling`` the dispatch returns sampled tokens, not
+        logits: each row's next-token input is read on-device from the
+        previous dispatch's output (``use_prev``/``src`` feed), and the
+        new tokens are recorded as placeholders resolved lazily by
+        :meth:`flush_tokens` — the per-step device→host sync is gone."""
+        fused = self.cfg.fused_sampling
+        if fused and any(ds.req_id in self._pending_rids
+                         and ds.req_id not in self._prev_rows
+                         for ds in slots):
+            # a slot's pending token predates the newest device array (the
+            # request sat out a step): resolve to host values once
+            self.flush_tokens()
         d = self._dec
         d['toks'].fill(0)
         d['poss'].fill(0)
         d['pts'].fill(QUARANTINE_PAGE)
+        d['use_prev'].fill(0)
+        d['src'].fill(0)
         for i, ds in enumerate(slots):
             req = self.requests[ds.req_id]
-            d['toks'][i] = req.context[-1]
+            if fused and ds.req_id in self._pending_rids:
+                d['use_prev'][i] = 1
+                d['src'][i] = self._prev_rows[ds.req_id]
+            else:
+                d['toks'][i] = req.context[-1]
             d['poss'][i] = len(req.context) - 1
             self._fill_page_table(d['pts'][i], req)
-        # padded slots write into quarantine (page 0) — harmless by design
-        db = {'tokens': jnp.asarray(d['toks']),
-              'positions': jnp.asarray(d['poss']),
-              'page_table': jnp.asarray(d['pts'])}
+        # padded slots write into quarantine (page 0) — harmless by design.
+        # Staging cache: the page tables — and the shared-run structure
+        # derived from (tables, length//pg) — only change when a page is
+        # appended, remapped, or the batch recomposes, so the staged device
+        # arrays are reused between changes (host→device staging and the
+        # shared-run rebuild otherwise dominate CPU step latency).
+        st = self._stage
+        key = (d['pts'].tobytes(), ((d['poss'] + 1) // self.pg).tobytes())
+        if st.get('key') != key:
+            st['key'] = key
+            st['pts'] = jnp.asarray(d['pts'])
+            st['shared'] = None
+            if self.cfg.prefix_shared_attention:
+                runs = build_shared_runs(d['pts'], d['poss'] + 1, self.pg)
+                if runs['n_slots']:
+                    # each shared physical page is read once per batch; the
+                    # saving is (participants − 1) reads per slot
+                    st['saved'] = int(runs['mask'].sum()) - runs['n_slots']
+                    # bucket the slot axis to the next power of two: the
+                    # full maxp-wide padding would double the shared-phase
+                    # FLOPs; a few buckets cost a few compiles.  The tail
+                    # axis stays maxp-wide on purpose — its live width
+                    # grows every page crossing, so bucketing it would
+                    # recompile the dispatch mid-decode
+                    cap = 1
+                    while cap < runs['n_slots']:
+                        cap <<= 1
+                    st['shared'] = {
+                        'pages': jnp.asarray(runs['pages'][:cap]),
+                        'pos': jnp.asarray(runs['pos'][:cap]),
+                        'mask': jnp.asarray(runs['mask'][:, :cap]),
+                        'tail_pt': jnp.asarray(runs['tail_pt']),
+                        'start': jnp.asarray(runs['start'])}
+        db = {'positions': jnp.asarray(d['poss']),
+              'page_table': st['pts']}
+        if st.get('shared') is not None:
+            self.stats.shared_page_reads_saved += st['saved']
+            db['shared'] = st['shared']
+        if fused:
+            # steady-state decode feeds every row from the previous device
+            # output, so (tokens, use_prev, src) are byte-stable — restage
+            # only when a row resolves to host values or rows move
+            fkey = (d['toks'].tobytes(), d['use_prev'].tobytes(),
+                    d['src'].tobytes())
+            if st.get('fkey') != fkey:
+                st['fkey'] = fkey
+                st['toks'] = jnp.asarray(d['toks'])
+                st['use_prev'] = jnp.asarray(d['use_prev'])
+                st['src'] = jnp.asarray(d['src'])
+            db['tokens'] = st['toks']
+            db['use_prev'] = st['use_prev']
+            db['src'] = st['src']
+            db['prev'] = self._prev_tokens
+            if self.cfg.temperature > 0:
+                db['seed'] = jnp.asarray(
+                    [(self.cfg.seed * 2654435761 + next(self._seed_ctr))
+                     & 0x7FFFFFFF], np.int32)
+            else:
+                # greedy ignores the sampling noise — stage the seed once
+                if 'seed0' not in st:
+                    st['seed0'] = jnp.zeros((1,), jnp.int32)
+                db['seed'] = st['seed0']
+        else:
+            db['tokens'] = jnp.asarray(d['toks'])
         self.session.iteration_start()                      # VALVE-SESSION
-        self.cache, logits = self._decode(self.params, self.cache, db)
+        if fused:
+            self.cache, toks = self._fused_decode(self.params, self.cache, db)
+        else:
+            self.cache, logits = self._decode(self.params, self.cache, db)
         self.session.iteration_end()                        # VALVE-SESSION
         self.stats.dispatches += 1
         self.stats.decode_iterations += 1
-        new = np.asarray(self._sample(logits))
+        if not fused:
+            new = np.asarray(self._sample(logits))
+            for i, ds in enumerate(slots):
+                req = self.requests[ds.req_id]
+                req.decode_steps += 1
+                self._append_token(req, int(new[i]))
+            return
+        if self._cpu_step_sync:
+            jax.block_until_ready(toks)  # see module header: dispatch race
+        if hasattr(toks, 'copy_to_host_async'):
+            toks.copy_to_host_async()   # overlap the eventual flush
+        records: List[tuple] = []
+        self._prev_tokens, self._prev_rows = toks, {}
         for i, ds in enumerate(slots):
             req = self.requests[ds.req_id]
             req.decode_steps += 1
-            self._append_token(req, int(new[i]))
+            self._prev_rows[ds.req_id] = i
+            self._append_pending(req, i, records)
+        self._pending.append((toks, records))
+        self._pending_rids.update(r[0] for r in records)
+        if self.cfg.eos_token is not None:
+            # the stop check needs token values — fetch every step (the
+            # documented fused-path fallback for eos-terminated serving)
+            self.flush_tokens()
+            for ds in slots:
+                req = self.requests[ds.req_id]
+                if (req.state == ReqState.RUNNING and req.generated
+                        and req.generated[-1] == self.cfg.eos_token):
+                    self._finish(req)
 
     def _sample(self, logits):
         if self.cfg.temperature > 0:
             self._key, sub = jax.random.split(self._key)
             return sample(logits, temperature=self.cfg.temperature, key=sub)
         return sample(logits)
+
+    def _append_pending(self, req: Request, row: int,
+                        records: List[tuple]) -> None:
+        """Fused-path append: the sampled value is still on device, so a
+        placeholder lands in ``generated`` (patched by flush_tokens) while
+        every count-based fact — fill progress, timestamps, length-based
+        finish — is recorded eagerly (none of it reads the value)."""
+        req.generated.append(-1)
+        records.append((req.req_id, len(req.generated) - 1, row))
+        if req.lease is not None:
+            req.lease.note_filled(len(req.context) - 1)
+        now = self.clock.now()
+        if req.t_first_token is None:
+            req.t_first_token = now
+        req.t_last_token = now
+        self.stats.tokens_generated += 1
+        if len(req.generated) >= req.max_new_tokens:
+            self._finish(req)
+
+    def flush_tokens(self) -> None:
+        """Resolve lazily-held sampled tokens to host ints (fused path).
+
+        The fused decode path leaves placeholders in ``Request.generated``
+        and keeps values on device; anything that reads token VALUES —
+        stream emission, prefill re-reads after invalidation, eos checks —
+        calls this first.  No-op when nothing is pending, so callers may
+        invoke it unconditionally."""
+        if not self._pending:
+            return
+        for arr, records in self._pending:
+            vals = np.asarray(arr)
+            for rid, gi, row in records:
+                self.requests[rid].generated[gi] = int(vals[row])
+        self._pending.clear()
+        self._pending_rids.clear()
+        self.stats.token_flushes += 1
 
     def _append_token(self, req: Request, tok: int) -> None:
         req.generated.append(tok)
@@ -440,4 +652,5 @@ class Engine:
                 if r.state == ReqState.FINISHED]
 
     def output_tokens(self, rid: str) -> List[int]:
+        self.flush_tokens()
         return list(self.requests[rid].generated)

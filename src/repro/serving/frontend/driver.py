@@ -179,6 +179,7 @@ class AsyncNodeDriver:
         if not self._streams:
             return
         eng = self.node.online
+        eng.flush_tokens()      # resolve fused-path lazy tokens (no-op else)
         done: List[str] = []
         for rid, stream in self._streams.items():
             req = eng.requests[rid]

@@ -370,3 +370,71 @@ def test_second_hit_while_queued_charges_only_the_shrink():
     assert eng.stats.tokens_recomputed == ctx # telescoped: full restart
     eng.run_to_completion()
     assert len(eng.output_tokens(rid)) == 8
+
+
+def test_fused_sampling_and_shared_attention_drain_bit_identity():
+    """The hot-path variants (fused unembed+sample with lazy on-device
+    tokens; prefix-shared attention over CoW pages) must drain a staggered
+    shared-prefix batch bit-identically to the stock path — the speed
+    claims in BENCH_kernels.json only count with this test green."""
+    cfg = reduced(get_config('internlm2-1.8b'), page_size=4)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(1, cfg.vocab_size, 12).tolist()   # 3 full pages
+
+    def run(fused, shared):
+        pool = KVPool(16, 4, page_size=4, reserved_handles=1)
+        MemoryPlane(pool, sharing=True)
+        eng = Engine(model, params, pool,
+                     EngineConfig(max_batch=3, max_seq=40, prefill_chunk=8,
+                                  fused_sampling=fused,
+                                  prefix_shared_attention=shared))
+        rids = [eng.submit(prompt, max_new_tokens=8)]
+        for _ in range(20):                  # publish r0's prefix first
+            eng.step()
+            if eng.requests[rids[0]].generated:
+                break
+        rids += [eng.submit(prompt, max_new_tokens=8) for _ in range(2)]
+        eng.run_to_completion()
+        return ([eng.output_tokens(r) for r in rids],
+                eng.stats.token_flushes, eng.stats.shared_page_reads_saved)
+
+    base, flushes0, saved0 = run(False, False)
+    fused_out, flushes1, _ = run(True, False)
+    both_out, _, saved2 = run(True, True)
+    assert flushes0 == 0 and flushes1 > 0    # fused really ran lazily
+    assert saved0 == 0 and saved2 > 0        # sharing really deduplicated
+    assert fused_out == base
+    assert both_out == base
+
+
+def test_shared_attention_only_engages_after_publication():
+    """Closure regression: identical prompts admitted in the SAME wave
+    have no published prefix to attach, so the prefix-shared read path
+    must find zero duplicate pages — sharing can only ever flow through
+    the plane's fill-gated publication, never through coincidence."""
+    cfg = reduced(get_config('internlm2-1.8b'), page_size=4)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(1, cfg.vocab_size, 12).tolist()
+
+    def run(shared):
+        pool = KVPool(16, 4, page_size=4, reserved_handles=1)
+        MemoryPlane(pool, sharing=True)
+        eng = Engine(model, params, pool,
+                     EngineConfig(max_batch=3, max_seq=40, prefill_chunk=8,
+                                  prefix_shared_attention=shared))
+        rids = [eng.submit(prompt, max_new_tokens=6) for _ in range(3)]
+        eng.run_to_completion()
+        plane = MemoryPlane.of(pool)
+        return ([eng.output_tokens(r) for r in rids],
+                eng.stats.shared_page_reads_saved,
+                plane.stats.shared_pages_attached)
+
+    out_on, saved, attached = run(True)
+    out_off, _, _ = run(False)
+    assert attached == 0                 # same-wave: nothing published yet
+    assert saved == 0                    # so the kernel saw no shared runs
+    assert out_on == out_off

@@ -88,3 +88,155 @@ def test_paged_vs_dense_attention():
                        kv_valid=kv_pos < lengths[:, None], causal=False)[:, 0]
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# prefix-shared attention: builder + two-phase kernel vs the stock oracle
+# ---------------------------------------------------------------------------
+
+from repro.kernels.paged_attention.ops import paged_attention_prefix_shared
+from repro.kernels.paged_attention.prefix import (QUARANTINE_PAGE,
+                                                 build_shared_runs,
+                                                 prefix_shared_ref)
+
+
+def _shared_setup(b=4, hq=4, hkv=2, d=32, pg=4, maxp=10, n_shared=3,
+                  seed=0, ragged=True):
+    """A CoW-shaped batch: every row starts with the same ``n_shared``
+    published prefix pages, then owns a private tail."""
+    rng = np.random.default_rng(seed)
+    n_pages = b * maxp + n_shared + 1
+    q = jnp.asarray(rng.normal(size=(b, hq, d)) * 0.5, jnp.float32)
+    pk = jnp.asarray(rng.normal(size=(n_pages, pg, hkv, d)) * 0.5,
+                     jnp.float32)
+    pv = jnp.asarray(rng.normal(size=(n_pages, pg, hkv, d)) * 0.5,
+                     jnp.float32)
+    pt = np.zeros((b, maxp), np.int32)
+    pt[:, :n_shared] = np.arange(1, n_shared + 1)
+    for i in range(b):
+        tail = maxp - n_shared
+        pt[i, n_shared:] = np.arange(n_shared + 1 + i * tail,
+                                     n_shared + 1 + (i + 1) * tail)
+    if ragged:
+        lengths = rng.integers(n_shared * pg + 1, maxp * pg + 1, size=b)
+    else:
+        lengths = np.full(b, maxp * pg)
+    return q, pk, pv, pt, lengths.astype(np.int32)
+
+
+@pytest.mark.parametrize('seed', [0, 1, 2])
+def test_prefix_shared_ref_matches_stock_ref(seed):
+    q, pk, pv, pt, lengths = _shared_setup(seed=seed)
+    runs = build_shared_runs(pt, lengths, 4)
+    assert runs['n_slots'] > 0
+    out = prefix_shared_ref(q, pk, pv, jnp.asarray(runs['pages']),
+                            jnp.asarray(runs['pos']),
+                            jnp.asarray(runs['mask']),
+                            jnp.asarray(runs['tail_pt']),
+                            jnp.asarray(runs['start']),
+                            jnp.asarray(lengths))
+    ref = paged_attention_ref(q, pk, pv, jnp.asarray(pt),
+                              jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_prefix_shared_pallas_matches_ref():
+    q, pk, pv, pt, lengths = _shared_setup(seed=5)
+    runs = build_shared_runs(pt, lengths, 4)
+    args = (q, pk, pv, jnp.asarray(runs['pages']), jnp.asarray(runs['pos']),
+            jnp.asarray(runs['mask']), jnp.asarray(runs['tail_pt']),
+            jnp.asarray(runs['start']), jnp.asarray(lengths))
+    out = paged_attention_prefix_shared(*args, backend='pallas',
+                                        interpret=True)
+    ref = paged_attention_ref(q, pk, pv, jnp.asarray(pt),
+                              jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_shared_runs_zero_sharing_uses_stock_path():
+    """Disjoint tables → no slots; the engine falls back to the stock walk."""
+    q, pk, pv, pt, lengths = _shared_setup(n_shared=0, seed=2)
+    runs = build_shared_runs(pt, lengths, 4)
+    assert runs['n_slots'] == 0
+    assert (runs['start'] == 0).all()
+    np.testing.assert_array_equal(runs['tail_pt'], pt)
+
+
+def test_shared_runs_partial_page_never_dedups():
+    """Only *fully-filled* pages may dedup: a shared page still being
+    written (length inside it) must stay in the per-row tail, where the
+    length mask guards it."""
+    q, pk, pv, pt, _ = _shared_setup(n_shared=3, seed=3)
+    pg = 4
+    lengths = np.full(pt.shape[0], 2 * pg + 1, np.int32)  # inside page 3
+    runs = build_shared_runs(pt, lengths, pg)
+    assert runs['n_slots'] == 2                     # pages 1-2 only
+    assert (runs['start'] == 2).all()
+    out = prefix_shared_ref(q, pk, pv, jnp.asarray(runs['pages']),
+                            jnp.asarray(runs['pos']),
+                            jnp.asarray(runs['mask']),
+                            jnp.asarray(runs['tail_pt']),
+                            jnp.asarray(runs['start']),
+                            jnp.asarray(lengths))
+    ref = paged_attention_ref(q, pk, pv, jnp.asarray(pt),
+                              jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_shared_runs_quarantine_never_becomes_a_slot():
+    """Quarantine (page 0) appears in every padded table — it must never
+    dedup into a shared slot even though it trivially matches across rows."""
+    pt = np.zeros((3, 6), np.int32)                 # all-quarantine tables
+    lengths = np.full(3, 24, np.int32)
+    runs = build_shared_runs(pt, lengths, 4)
+    assert runs['n_slots'] == 0
+    assert (runs['pages'] == QUARANTINE_PAGE).all()
+
+
+def test_shared_runs_slot_overflow_clamps_soundly():
+    """More distinct share groups than slots: the builder clamps runs at
+    the first non-fitting index — overflowing pages stay in tails and the
+    output still matches the oracle exactly."""
+    q, pk, pv, pt, lengths = _shared_setup(b=4, maxp=10, n_shared=6, seed=4)
+    runs = build_shared_runs(pt, lengths, 4, max_slots=3)
+    assert 0 < runs['n_slots'] <= 3
+    assert (runs['start'] <= 3).all()
+    out = prefix_shared_ref(q, pk, pv, jnp.asarray(runs['pages']),
+                            jnp.asarray(runs['pos']),
+                            jnp.asarray(runs['mask']),
+                            jnp.asarray(runs['tail_pt']),
+                            jnp.asarray(runs['start']),
+                            jnp.asarray(lengths))
+    ref = paged_attention_ref(q, pk, pv, jnp.asarray(pt),
+                              jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_shared_runs_closure_never_imports_foreign_pages():
+    """The kernel-boundary sharing invariant: a slot exists ONLY for a page
+    present at the same logical index in >= 2 of the batch's own tables.
+    A page unique to one row — e.g. another session's unpublished lease
+    that somehow landed in a hand-built table — can never be deduplicated,
+    so prefix-shared attention can never be steered into reading unshared
+    state wider than the stock kernel would."""
+    rng = np.random.default_rng(9)
+    for _ in range(50):
+        b, maxp, pg = 4, 8, 4
+        pt = rng.integers(1, 12, size=(b, maxp)).astype(np.int32)
+        pt[rng.random((b, maxp)) < 0.2] = QUARANTINE_PAGE
+        lengths = rng.integers(1, maxp * pg + 1, size=b).astype(np.int32)
+        runs = build_shared_runs(pt, lengths, pg)
+        n_full = lengths // pg
+        for si in range(runs['n_slots']):
+            p, j = int(runs['pages'][si]), int(runs['pos'][si])
+            holders = [i for i in range(b)
+                       if pt[i, j] == p and j < n_full[i]]
+            assert len(holders) >= 2, (p, j, pt.tolist())
+            # and participation is exactly the holders whose leading run
+            # reaches this index (mask never includes a non-holder)
+            members = np.nonzero(runs['mask'][:, si])[0].tolist()
+            assert set(members) <= set(holders)
