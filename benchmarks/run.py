@@ -30,6 +30,7 @@ BENCHES = [
     ('api_overhead', 'control-plane API v1 — session/event hot-path cost'),
     ('prefix_reuse', 'memory plane v1 — prefix sharing + partial-invalidation tax'),
     ('kernel_hotpath', 'kernel hot path — fused sampling + prefix-shared decode step'),
+    ('shard_scale', 'multi-device plane — mesh scaling + cross-pool rescue tax'),
 ]
 
 
@@ -64,6 +65,8 @@ def main():
                 mod.run(horizon_s=120.0)
             elif args.fast and name == 'kernel_hotpath':
                 mod.run(warm=12, steps=24, gen=64)
+            elif args.fast and name == 'shard_scale':
+                mod.run(mesh_sizes=(1, 2, 4), warm=12, steps=16, gen=64)
             else:
                 mod.run()
         except Exception:

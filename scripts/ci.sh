@@ -145,6 +145,9 @@ fi
 echo "== kernel hot-path smoke (fused decode regression gate) =="
 python benchmarks/kernel_hotpath.py --smoke
 
+echo "== shard-scale smoke (mesh parity + zero-recompute rescue gate) =="
+python benchmarks/shard_scale.py --smoke
+
 echo "== tier-1 =="
 python -m pytest -x -q
 

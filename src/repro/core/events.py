@@ -10,7 +10,9 @@ counters, so all of them observe the *same ordered facts*:
 - :class:`ReclamationEvent`     — offline KV handles reclaimed (paper §5);
 - :class:`WakeupEvent`          — offline compute re-enabled after T_cool;
 - :class:`ReservationChangeEvent` — MIAD moved the reserved-handle set H;
-- :class:`MemoryPressureEvent`  — an online allocation overflowed H.
+- :class:`MemoryPressureEvent`  — an online allocation overflowed H;
+- :class:`PageMigration`        — KV pages changed owner/pool (cross-pool
+  rescue of a reclamation victim, or an intra-pool ownership re-key).
 
 The paper's §5 ordering rule ("compute first") and the §4.2 rate bound
 ("≤ 1 preemption per request", wake only after T_cool) become *checkable
@@ -33,23 +35,27 @@ from typing import (
 
 __all__ = [
     'RuntimeEvent', 'PreemptionEvent', 'ReclamationEvent', 'WakeupEvent',
-    'ReservationChangeEvent', 'MemoryPressureEvent', 'EventBus',
-    'EVENT_TYPES', 'check_event_ordering',
+    'ReservationChangeEvent', 'MemoryPressureEvent', 'PageMigration',
+    'EventBus', 'EVENT_TYPES', 'check_event_ordering',
 ]
 
 
 class PreemptionEvent(NamedTuple):
     """Offline compute gates closed (online activity or memory pressure).
 
-    ``latency_s`` is the measured/modeled gate-flip latency; ``requests``
-    are the online requests in flight (the §4.2 bound is per-request);
-    ``trigger`` distinguishes lifecycle closes from memory-pressure closes.
+    ``latency_s`` is the measured/modeled gate-flip latency for the whole
+    group flip; ``device_latencies_s`` carries each device's own measured
+    flip latency (indexed by gate, so fanout == max, serial == Σ is
+    checkable from the log); ``requests`` are the online requests in
+    flight (the §4.2 bound is per-request); ``trigger`` distinguishes
+    lifecycle closes from memory-pressure closes.
     """
     seq: int
     t: float
     latency_s: float = 0.0
     requests: Tuple[str, ...] = ()
     trigger: str = 'lifecycle'          # 'lifecycle' | 'memory'
+    device_latencies_s: Tuple[float, ...] = ()
 
 
 class ReclamationEvent(NamedTuple):
@@ -98,9 +104,36 @@ class MemoryPressureEvent(NamedTuple):
     deficit_pages: int = 0
 
 
+class PageMigration(NamedTuple):
+    """KV pages moved between owners and/or pools.
+
+    Published by ``KVPool.transfer_pages`` (when the pool has a bus), so
+    page movement is observable instead of silent bookkeeping.
+    ``cross_pool=True`` is the Valve rescue path: a reclamation victim's
+    surviving prefix re-homed to a less-loaded pool with zero recompute;
+    ``cross_pool=False`` is an intra-pool ownership re-key (e.g. shared
+    prefix pages outliving their lease).
+
+    ``src_pages``/``dst_pages`` are the page ids in logical order (equal
+    for intra-pool re-keys; pool-local on each side for cross-pool moves)
+    — the orchestrator's data-plane copy reads them to move the actual KV
+    cache rows between the engines' caches, synchronously at publish time,
+    before the freed source pages can be reallocated and overwritten.
+    """
+    seq: int
+    t: float
+    owner: str = ''                     # request/lease id that owns the pages
+    n_pages: int = 0
+    src_pool: str = ''
+    dst_pool: str = ''
+    cross_pool: bool = False
+    src_pages: Tuple[int, ...] = ()
+    dst_pages: Tuple[int, ...] = ()
+
+
 EVENT_TYPES: Tuple[type, ...] = (
     PreemptionEvent, ReclamationEvent, WakeupEvent, ReservationChangeEvent,
-    MemoryPressureEvent)
+    MemoryPressureEvent, PageMigration)
 
 
 class RuntimeEvent(abc.ABC):

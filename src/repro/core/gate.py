@@ -52,21 +52,28 @@ class DeviceGate:
     # -- control plane ----------------------------------------------------
     # ``charge_latency=False`` lets a group-level flip charge the modeled
     # op latency once for the whole fan-out instead of per device.
+    # Both flips return THIS device's measured flip latency in seconds
+    # (wall time under a real clock, the charged model under a virtual
+    # one) — the group folds these into the event stream.
     def disable(self, now: Optional[float] = None, *,
-                charge_latency: bool = True) -> None:
+                charge_latency: bool = True) -> float:
+        t0 = self.clock.now()
         if self.op_latency_s and charge_latency:
             self.clock.sleep(self.op_latency_s)
         self._enabled.clear()
         self.stats.disables += 1
         self.stats.last_disable_t = self.clock.now() if now is None else now
+        return self.clock.now() - t0
 
     def enable(self, now: Optional[float] = None, *,
-               charge_latency: bool = True) -> None:
+               charge_latency: bool = True) -> float:
+        t0 = self.clock.now()
         if self.op_latency_s and charge_latency:
             self.clock.sleep(self.op_latency_s)
         self._enabled.set()
         self.stats.enables += 1
         self.stats.last_enable_t = self.clock.now() if now is None else now
+        return self.clock.now() - t0
 
     # -- data plane (called by the offline engine between chunks) ---------
     @property
@@ -93,6 +100,9 @@ class GateGroup:
         self.mode = mode
         self.clock = clock or RealClock()
         self._node_lock = threading.Lock()
+        # per-device flip latencies of the most recent group flip, indexed
+        # like ``gates`` — the runtime folds these into PreemptionEvents
+        self.last_flip_latencies: tuple = ()
         # a virtual clock charges modeled latencies synchronously — real
         # threads would race on the shared clock and record sums, not maxes
         self._pool = (ThreadPoolExecutor(max_workers=max(len(gates), 1))
@@ -100,26 +110,34 @@ class GateGroup:
                       else None)
 
     def _apply(self, fn_name: str) -> float:
-        """Flip all gates; returns elapsed seconds (the preemption latency)."""
+        """Flip all gates; returns elapsed seconds (the preemption latency).
+
+        Each branch also records the MEASURED per-device flip latency in
+        ``last_flip_latencies``: serial flips measure under the node lock,
+        real-clock fanout measures inside each worker thread, and
+        virtual-clock fanout charges every device its own modeled latency
+        (the group advances the shared clock once, by the max)."""
         t0 = self.clock.now()
         if self.mode == 'serial':
             # un-patched driver: node lock serializes → Σ op latencies
             # (each gate charges its latency on the shared clock, so this
             # branch is correct under both real and virtual clocks)
             with self._node_lock:
-                for g in self.gates:
-                    getattr(g, fn_name)()
+                per = [getattr(g, fn_name)() for g in self.gates]
         elif self.clock.virtual:
             # patched driver under a virtual clock: concurrent flips →
             # max op latency, charged once for the group
             self.clock.sleep(max((g.op_latency_s for g in self.gates),
                                  default=0.0))
+            per = []
             for g in self.gates:
                 getattr(g, fn_name)(charge_latency=False)
+                per.append(g.op_latency_s)
         else:
-            futs = [self._pool.submit(getattr(g, fn_name)) for g in self.gates]
-            for f in futs:
-                f.result()
+            futs = [self._pool.submit(getattr(g, fn_name))
+                    for g in self.gates]
+            per = [f.result() for f in futs]
+        self.last_flip_latencies = tuple(per)
         return self.clock.now() - t0
 
     def disable_all(self) -> float:

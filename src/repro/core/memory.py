@@ -65,18 +65,26 @@ class LeaseInvalidation(_Sequence):
     ``lost_tokens`` — materialized tokens that must be recomputed
     (fill before the hit − ``resume``).
     ``released``    — True when nothing survived and the lease was dropped
-    (the request re-admits from scratch, legacy semantics)."""
+    (the request re-admits from scratch, legacy semantics).
+    ``migrated_to`` — destination pool name when the victim was *rescued*:
+    its whole lease moved to a less-loaded pool before the handles were
+    physically taken, so nothing was lost (``lost_tokens == 0``) and the
+    request re-admits against the destination pool's plane with its full
+    prefix intact.  None for ordinary (truncating) invalidations."""
 
-    __slots__ = ('pages', 'keep', 'resume', 'lost_tokens', 'released')
+    __slots__ = ('pages', 'keep', 'resume', 'lost_tokens', 'released',
+                 'migrated_to')
 
     def __init__(self, pages: Iterable[int], keep: int = 0,
                  resume: int = 0, released: bool = True,
-                 lost_tokens: float = 0.0):
+                 lost_tokens: float = 0.0,
+                 migrated_to: Optional[str] = None):
         self.pages = tuple(pages)
         self.keep = int(keep)
         self.resume = int(resume)
         self.lost_tokens = float(lost_tokens)
         self.released = bool(released)
+        self.migrated_to = migrated_to
 
     def __len__(self) -> int:
         return len(self.pages)
@@ -95,8 +103,10 @@ class LeaseInvalidation(_Sequence):
     __hash__ = None
 
     def __repr__(self) -> str:
+        mig = f', migrated_to={self.migrated_to!r}' if self.migrated_to \
+            else ''
         return (f'LeaseInvalidation(pages={list(self.pages)}, '
-                f'keep={self.keep}, resume={self.resume})')
+                f'keep={self.keep}, resume={self.resume}{mig})')
 
 
 class KVLease(_Sequence):
@@ -205,6 +215,9 @@ class MemoryPlaneStats:
     partial_invalidations: int = 0     # … of which kept a surviving prefix
     tokens_preserved: float = 0.0      # Σ resume tokens (recompute saved)
     pages_preserved: int = 0           # Σ surviving pages
+    # cross-pool rescue
+    leases_migrated: int = 0           # victims re-homed to another pool
+    pages_migrated: int = 0            # Σ pages moved cross-pool
 
 
 class MemoryPlane:
@@ -231,8 +244,13 @@ class MemoryPlane:
         self.stats = MemoryPlaneStats()
         # fired with the lease id whenever a lease fully dies (release or
         # zero-survivor invalidation) — the runtime drops its delivery
-        # route here, so route lifetime == lease lifetime by construction
+        # route here, so route lifetime == lease lifetime by construction.
+        # Migration also fires it: the lease leaves THIS plane, so the
+        # local route must die exactly like a release.
         self.on_release: Optional[Callable[[str], None]] = None
+        # planes a reclamation victim may be rescued to (cross-pool
+        # migration); empty list = rescue disabled (truncate as before)
+        self.migration_targets: List['MemoryPlane'] = []
         # -- per-page tracking (plane-managed pages only) -------------------
         self._page_users: Dict[int, Set[str]] = {}   # lease ids holding a ref
         self._page_owner: Dict[int, str] = {}        # pool owner id
@@ -634,15 +652,112 @@ class MemoryPlane:
             self.pool.free(lease_id)          # legacy id around the plane
 
     # ------------------------------------------------------------------
+    # Cross-pool migration (reclamation-victim rescue)
+    # ------------------------------------------------------------------
+    def migrate(self, lease_id: str, dst: 'MemoryPlane'
+                ) -> Optional[KVLease]:
+        """Re-home a live lease to ``dst``'s pool with all KV bookkeeping
+        intact (same filled/resume point — zero recompute for the owner).
+
+        Only *privately held* leases move: every page must be solely
+        referenced by this lease and held under its own pool id (shared
+        prefix pages are pinned by other leases' references).  Published
+        pages a lease still solely holds DO move — their prefix-index
+        entries are withdrawn, so no later admission can attach a page
+        that left the pool.  Returns the (same) lease object, now owned by
+        ``dst``, or None if the lease is ineligible or ``dst`` cannot fit
+        it (source untouched on failure)."""
+        lease = self.leases.get(lease_id)
+        if lease is None or lease.released or dst is self:
+            return None
+        lid = lease.lease_id
+        assert lid not in dst.leases, f'lease id {lid!r} live in target'
+        pages = list(lease._pages)
+        for p in pages:
+            if self._page_users.get(p) != {lid} \
+                    or self._page_owner.get(p) != lid:
+                return None
+        got = self.pool.transfer_pages(lid, pages, lid, dst_pool=dst.pool)
+        if got is None:
+            return None
+        for p in pages:
+            self._forget(p)
+        del self.leases[lid]
+        # page ids are pool-local: the lease's logical order is preserved,
+        # the physical ids are the destination allocation
+        lease._pages = list(got)
+        lease._pending_publish.clear()
+        lease._clean = True
+        lease.plane = dst
+        dst.leases[lid] = lease
+        for i, p in enumerate(got):
+            dst._track(p, lid, i, lid)
+        self.stats.leases_migrated += 1
+        self.stats.pages_migrated += len(got)
+        if self.on_release is not None:
+            self.on_release(lid)          # the local route dies with us
+        return lease
+
+    def _pick_migration_target(self, lease: KVLease
+                               ) -> Optional['MemoryPlane']:
+        """Least-loaded target with room for the whole lease, or None."""
+        best, best_free = None, -1
+        need = len(lease._pages)
+        for dst in self.migration_targets:
+            if dst is self:
+                continue
+            free = dst.pool.free_pages_for(lease.klass)
+            if free >= need and free > best_free:
+                best, best_free = dst, free
+        return best
+
+    def _rescue_victims(self, handles: Sequence[int]
+                        ) -> Dict[str, LeaseInvalidation]:
+        """Migrate would-be reclamation victims out of ``handles`` before
+        the pages are physically taken.  A rescued lease frees its source
+        pages (the reclaimer still gets its handles) but keeps every token
+        of KV in the destination pool — the invalidation entry records the
+        hit pages with ``lost_tokens == 0`` and ``migrated_to`` set."""
+        hit: Dict[str, List[int]] = {}
+        for h in handles:
+            for p in self.pool._handle_pages(h):
+                if self.pool.owner[p] is None:
+                    continue
+                users = self._page_users.get(p)
+                if users:
+                    for lid in users:
+                        hit.setdefault(lid, []).append(p)
+        out: Dict[str, LeaseInvalidation] = {}
+        for lid, hit_pages in hit.items():
+            lease = self.leases[lid]
+            dst = self._pick_migration_target(lease)
+            if dst is None or self.migrate(lid, dst) is None:
+                continue                   # truncation path handles it
+            out[lid] = LeaseInvalidation(
+                hit_pages, keep=len(lease._pages), resume=lease.filled,
+                released=False, lost_tokens=0.0,
+                migrated_to=dst.pool.name)
+        return out
+
+    # ------------------------------------------------------------------
     # Reclamation (partial invalidation)
     # ------------------------------------------------------------------
     def reclaim_handles(self, handles: Sequence[int], now: float = 0.0
                         ) -> Dict[str, LeaseInvalidation]:
         """Physically reclaim ``handles`` and translate the raw page map
         into per-lease invalidations with surviving prefixes.  The caller
-        (ReclamationController) must hold the compute gate closed."""
+        (ReclamationController) must hold the compute gate closed.
+
+        With ``migration_targets`` set, victims are first offered a
+        cross-pool rescue (:meth:`_rescue_victims`); the remaining hits
+        take the ordinary truncation path."""
+        migrated: Dict[str, LeaseInvalidation] = {}
+        if self.migration_targets:
+            migrated = self._rescue_victims(handles)
         raw = self.pool.reclaim_handles(handles, now, free_survivors=False)
-        return self.apply_pool_invalidation(raw)
+        out = self.apply_pool_invalidation(raw)
+        out.update(migrated)
+        return out
 
     def apply_pool_invalidation(self, raw: Dict[str, List[int]]
                                 ) -> Dict[str, LeaseInvalidation]:

@@ -155,22 +155,27 @@ class ReclamationController:
 
         self.stats.reclamations += 1
         self.stats.handles_reclaimed += len(victims)
+        # rescued (cross-pool migrated) victims lost nothing — their KV
+        # moved intact, so they are not "invalidated" for stats or the
+        # event; the pool already published PageMigration for each
+        truncated = {rid: v for rid, v in invalidated.items()
+                     if getattr(v, 'migrated_to', None) is None}
         # PHYSICAL pages: a shared prefix page appears in every using
         # lease's record — count each page id once
-        n_pages = len({p for v in invalidated.values() for p in v})
+        n_pages = len({p for v in truncated.values() for p in v})
         self.stats.pages_invalidated += n_pages
-        self.stats.requests_impacted += len(invalidated)
+        self.stats.requests_impacted += len(truncated)
         # recompute tax actually inflicted: fill lost beyond the surviving
         # prefix (legacy ids report their remapped pages, as before)
         self.stats.tokens_lost += sum(v.lost_tokens
-                                      for v in invalidated.values())
+                                      for v in truncated.values())
         self.rate.note(now)
 
         if self.bus is not None:
             from repro.core.events import ReclamationEvent
             self.bus.publish(
                 ReclamationEvent, n_handles=len(victims),
-                requests=tuple(sorted(invalidated)),
+                requests=tuple(sorted(truncated)),
                 pages=n_pages,
                 gate_closed=True)
 

@@ -56,6 +56,11 @@ from repro.serving.kvpool import KVPool
 @dataclass
 class RuntimeConfig:
     n_devices: int = 1
+    # Device topology: a jax.sharding.Mesh (the one the engine shards
+    # over).  When set, the runtime instantiates one DeviceGate per mesh
+    # device — overriding n_devices — so the gate fan-out is the real
+    # flip across the serving mesh, not a modeled count.
+    mesh: Optional[object] = None
     gate_mode: str = 'fanout'          # 'fanout' (patched driver) | 'serial'
     gate_op_latency_s: float = 0.0
     policy: str = 'valve'              # eviction policy: 'valve' | 'fifo'
@@ -99,6 +104,11 @@ class ValveRuntime:
         self.memory.on_release = self._lease_released
         # -- control plane: event stream + derived telemetry ------------
         self.bus = EventBus(self.clock, log_maxlen=self.cfg.event_log_maxlen)
+        # the pool publishes PageMigration on the runtime bus (cross-pool
+        # rescue observability); aux pools registered by the orchestrator
+        # share the same bus so node-wide folds see every migration
+        if getattr(pool, 'bus', None) is None:
+            pool.bus = self.bus
         self.lifecycle = OnlineLifecycleTracker(
             t_cool_init=self.cfg.t_cool_init)
         self.stats = RuntimeStats()
@@ -116,10 +126,17 @@ class ValveRuntime:
         self._invalidation_route: Dict[str, InvalidationCallback] = {}
         self._invalidation_fallback = on_invalidate
         # gates share the runtime clock so sim runs record modeled (and
-        # deterministic) flip latencies, not wall-clock noise
+        # deterministic) flip latencies, not wall-clock noise.  With a
+        # mesh, one gate per mesh device: preemption is the real fan-out
+        # across the serving mesh, and each PreemptionEvent folds the
+        # measured per-device flip latencies into the stream.
+        n_dev = self.cfg.n_devices
+        if self.cfg.mesh is not None:
+            n_dev = self.cfg.mesh.devices.size
+        self.n_devices = n_dev
         self.gates = GateGroup(
             [DeviceGate(i, self.cfg.gate_op_latency_s, clock=self.clock)
-             for i in range(self.cfg.n_devices)],
+             for i in range(n_dev)],
             mode=self.cfg.gate_mode, clock=self.clock)
         miad_cfg = dataclasses.replace(
             self.cfg.miad, h_max=min(self.cfg.miad.h_max, pool.n_handles))
@@ -223,6 +240,13 @@ class ValveRuntime:
         groups: Dict[object, Dict[str, List[int]]] = {}
         unrouted: Dict[str, List[int]] = {}
         for rid, pages in invalidated.items():
+            if getattr(pages, 'migrated_to', None) is not None:
+                # rescued cross-pool: the lease (and its KV) moved intact
+                # to another pool's plane — there is nothing for the local
+                # engine to truncate or recompute, and the orchestrator
+                # hands the request off via the PageMigration event.  The
+                # local route already died in MemoryPlane.migrate.
+                continue
             sess = self._owner.get(rid)
             # a session without its own callback (e.g. the hidden legacy
             # sessions behind the klass-string shims) must not shadow a
@@ -274,7 +298,8 @@ class ValveRuntime:
             self.bus.publish(
                 PreemptionEvent, latency_s=latency,
                 requests=tuple(sorted(self.lifecycle.active)),
-                trigger=trigger)
+                trigger=trigger,
+                device_latencies_s=self.gates.last_flip_latencies)
 
     # ------------------------------------------------------------------
     # Memory plane (session-internal; the klass-string methods below are

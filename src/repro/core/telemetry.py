@@ -23,8 +23,9 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.events import (
-    EventBus, MemoryPressureEvent, PreemptionEvent, ReclamationEvent,
-    ReservationChangeEvent, RuntimeEvent, WakeupEvent, check_event_ordering)
+    EventBus, MemoryPressureEvent, PageMigration, PreemptionEvent,
+    ReclamationEvent, ReservationChangeEvent, RuntimeEvent, WakeupEvent,
+    check_event_ordering)
 
 __all__ = ['LatencySummary', 'TelemetryRegistry']
 
@@ -131,6 +132,8 @@ class _Counters:
     requests_killed: int = 0
     memory_pressure_events: int = 0
     reservation_changes: int = 0
+    pages_migrated: int = 0              # cross-pool rescue pages
+    requests_migrated: int = 0           # cross-pool rescued victims
     per_request_preemptions: Dict[str, int] = field(default_factory=dict)
 
 
@@ -162,6 +165,7 @@ class TelemetryRegistry:
             ReclamationEvent: self._on_reclamation,
             MemoryPressureEvent: self._on_pressure,
             ReservationChangeEvent: self._on_reservation,
+            PageMigration: self._on_migration,
         }
         bus.set_fold(self._on_event)
 
@@ -212,6 +216,13 @@ class TelemetryRegistry:
     def _on_reservation(self, ev: ReservationChangeEvent) -> None:
         self.counters.reservation_changes += 1
 
+    def _on_migration(self, ev: PageMigration) -> None:
+        # intra-pool re-keys are bookkeeping, not rescues — count only
+        # actual cross-pool page movement
+        if ev.cross_pool:
+            self.counters.pages_migrated += ev.n_pages
+            self.counters.requests_migrated += 1
+
     # ------------------------------------------------------------------
     @property
     def max_preemptions_per_request(self) -> int:
@@ -231,6 +242,8 @@ class TelemetryRegistry:
             'requests_killed': c.requests_killed,
             'memory_pressure_events': c.memory_pressure_events,
             'reservation_changes': c.reservation_changes,
+            'pages_migrated': c.pages_migrated,
+            'requests_migrated': c.requests_migrated,
             'max_preemptions_per_request': self.max_preemptions_per_request,
             'preemption_latency': self.preemption_latencies.summary(),
         }

@@ -129,8 +129,15 @@ def axis_rules(mesh: Optional[Mesh], rules: Dict[str, AxisVal]):
 def logical_to_spec(axes: Sequence[Optional[str]],
                     rules: Dict[str, AxisVal],
                     mesh: Optional[Mesh] = None) -> P:
-    """Map logical axis names to a PartitionSpec, dropping absent mesh axes."""
-    mesh_axes = set(mesh.axis_names) if mesh is not None else None
+    """Map logical axis names to a PartitionSpec, dropping absent mesh axes.
+
+    A rule whose mapped axes are *all* absent from the mesh resolves to
+    ``None`` (replicated) — never a stale name tuple.  ``mesh=None`` has no
+    axes at all, so every mapping degrades to replicated; the old behavior
+    (pass the rule tuple through unfiltered) produced specs naming axes no
+    mesh provides, which ``NamedSharding`` rejects.
+    """
+    mesh_axes = set(mesh.axis_names) if mesh is not None else set()
     used: set = set()
     parts = []
     for ax in axes:
@@ -139,8 +146,7 @@ def logical_to_spec(axes: Sequence[Optional[str]],
             parts.append(None)
             continue
         val_t = (val,) if isinstance(val, str) else tuple(val)
-        if mesh_axes is not None:
-            val_t = tuple(v for v in val_t if v in mesh_axes)
+        val_t = tuple(v for v in val_t if v in mesh_axes)
         val_t = tuple(v for v in val_t if v not in used)
         used.update(val_t)
         if not val_t:

@@ -21,20 +21,43 @@ plumbing (and no per-request ``bind_invalidation`` table) in drivers.
 The orchestrator observes the runtime through the typed event stream
 (``runtime.subscribe``) and the unified telemetry registry
 (``runtime.telemetry``) — it never reaches into per-plane stat objects.
+
+**Multi-pool nodes** (cross-pool KV rescue): :meth:`add_pool` registers
+auxiliary :class:`KVPool` instances — one per device group — whose memory
+planes become migration targets of each other and of the runtime pool.
+When online pressure reclaims offline handles, the plane first tries to
+*migrate* each victim's lease to the least-loaded other pool
+(``KVPool.transfer_pages`` cross-pool) instead of truncating it.  The
+orchestrator subscribes to the resulting :class:`PageMigration` events and
+completes the rescue at both planes:
+
+- **data plane** — the KV cache rows behind the moved pages are copied
+  from the source engine's cache into the destination engine's cache,
+  synchronously at publish time (before the freed source pages can be
+  reallocated and overwritten);
+- **control plane** — the ``Request`` object is handed off from the source
+  engine to an engine serving the destination pool and resubmitted; its
+  live lease already sits in the destination plane, so admission extends
+  it and prefill resumes at ``lease.resume_tokens`` — zero tokens of
+  recompute are charged anywhere on this path.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.core.events import (
-    PreemptionEvent, ReclamationEvent, RuntimeEvent, WakeupEvent)
+    PageMigration, PreemptionEvent, ReclamationEvent, RuntimeEvent,
+    WakeupEvent)
+from repro.core.memory import MemoryPlane
 from repro.core.runtime import ValveRuntime
 from repro.models.api import build_model
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.kvpool import KVPool
+from repro.serving.scheduler import ReqState
 
 
 @dataclass
@@ -48,6 +71,8 @@ class NodeStats:
     preemptions_seen: int = 0
     wakeups_seen: int = 0
     invalidation_bursts_seen: int = 0
+    migrations_seen: int = 0        # cross-pool PageMigration events
+    requests_rescued: int = 0       # handoffs completed (request moved)
 
 
 class NodeOrchestrator:
@@ -68,6 +93,9 @@ class NodeOrchestrator:
         # advance at all, livelocking drain()); works for both clock kinds
         self.idle_advance = idle_advance
         self._rr = 0                # round-robin cursor over offline engines
+        # auxiliary pools (one per device group) and completed rescues
+        self.pools: List[KVPool] = []
+        self.rescues: List[Tuple[str, str, str]] = []  # (rid, src, dst)
         runtime.subscribe(self._on_runtime_event)
 
     def _on_runtime_event(self, ev: RuntimeEvent) -> None:
@@ -79,14 +107,28 @@ class NodeOrchestrator:
             self.stats.wakeups_seen += 1
         elif isinstance(ev, ReclamationEvent):
             self.stats.invalidation_bursts_seen += 1
+        elif isinstance(ev, PageMigration) and ev.cross_pool:
+            self.stats.migrations_seen += 1
+            self._handoff_migration(ev)
 
     # ------------------------------------------------------------------
     # Registration
     # ------------------------------------------------------------------
     def register(self, engine: Engine, name: Optional[str] = None) -> Engine:
-        """Register a pre-built engine (must share this node's runtime)."""
-        assert engine.runtime is self.runtime, \
-            'engine must be built on this node\'s runtime'
+        """Register a pre-built engine.
+
+        Runtime-backed engines must share this node's runtime; pool-backed
+        engines (no runtime — a :class:`PoolSession` over an auxiliary
+        pool) must be OFFLINE and serve a pool added via :meth:`add_pool`.
+        """
+        if engine.runtime is not None:
+            assert engine.runtime is self.runtime, \
+                'engine must be built on this node\'s runtime'
+        else:
+            assert engine.pool in self.pools, \
+                'pool-backed engine must serve a pool from add_pool'
+            assert engine.cfg.klass == 'offline', \
+                'auxiliary-pool engines are offline only'
         assert engine.mcfg.page_size == self.pool.page_size, \
             (engine.mcfg.page_size, self.pool.page_size)
         if engine.cfg.klass == 'online':
@@ -101,22 +143,99 @@ class NodeOrchestrator:
         return engine
 
     def add_engine(self, model_cfg, engine_cfg: EngineConfig, *,
-                   params=None, seed: int = 0,
-                   name: Optional[str] = None) -> Engine:
+                   params=None, seed: int = 0, name: Optional[str] = None,
+                   pool: Optional[KVPool] = None) -> Engine:
         """Build a model + engine on this node's runtime and register it.
         Heterogeneous colocation = calling this with different model configs
-        (page_size must match the shared pool)."""
+        (page_size must match the shared pool).  With ``pool`` set to an
+        auxiliary pool (see :meth:`add_pool`), the engine is built over
+        that pool's memory plane instead of the runtime — the migration
+        destination for cross-pool rescues."""
         model = build_model(model_cfg)
         if params is None:
             params = model.init_params(jax.random.PRNGKey(seed))
-        eng = Engine(model, params, None, engine_cfg,
-                     runtime=self.runtime, clock=self.clock)
+        if pool is not None and pool is not self.pool:
+            eng = Engine(model, params, pool, engine_cfg, clock=self.clock)
+        else:
+            eng = Engine(model, params, None, engine_cfg,
+                         runtime=self.runtime, clock=self.clock)
         return self.register(eng, name)
+
+    def add_pool(self, pool: KVPool) -> KVPool:
+        """Register an auxiliary KV pool (one per device group).
+
+        The pool joins the node's event stream (PageMigration publishes on
+        the runtime bus) and every plane on the node — runtime pool plus
+        all auxiliary pools — becomes a migration target of the others, so
+        a reclamation victim on any pool can be rescued to the least
+        loaded of the rest."""
+        assert pool is not self.pool and pool not in self.pools, \
+            'pool already registered'
+        assert pool.page_size == self.pool.page_size, \
+            (pool.page_size, self.pool.page_size)
+        pool.bus = self.runtime.bus
+        self.pools.append(pool)
+        planes = [self.runtime.memory] + \
+            [MemoryPlane.of(p) for p in self.pools]
+        for pl in planes:
+            pl.migration_targets = [q for q in planes if q is not pl]
+        return pool
 
     @property
     def engines(self) -> List[Engine]:
         return ([self.online] if self.online is not None else []) + \
             list(self.offline)
+
+    # ------------------------------------------------------------------
+    # Cross-pool rescue handoff (PageMigration subscriber)
+    # ------------------------------------------------------------------
+    def _engine_for_pool(self, pool_name: str,
+                         holding: Optional[str] = None) -> Optional[Engine]:
+        for eng in self.engines:
+            if eng.pool.name != pool_name:
+                continue
+            if holding is None or holding in eng.requests:
+                return eng
+        return None
+
+    def _handoff_migration(self, ev: PageMigration) -> None:
+        """Complete a cross-pool rescue: copy the KV cache rows behind the
+        moved pages and move the Request to an engine on the target pool.
+
+        Runs synchronously inside the event publish — i.e. inside the
+        reclamation that triggered the rescue, while the source engine is
+        quiescent (reclamation only fires from online allocation pressure
+        and the runtime tick, never mid-offline-dispatch) and before the
+        freed source pages can be reallocated and overwritten."""
+        src = self._engine_for_pool(ev.src_pool, holding=ev.owner)
+        dst = self._engine_for_pool(ev.dst_pool)
+        if src is None or dst is None or src is dst:
+            return                  # not a serving-engine lease — no handoff
+        # data plane: same-architecture engines move the physical KV rows
+        # (page axis 1 of the engine pool layout); heterogeneous pairs keep
+        # the bookkeeping-level rescue only
+        if ev.src_pages and src.mcfg.name == dst.mcfg.name:
+            s = np.asarray(ev.src_pages)
+            d = np.asarray(ev.dst_pages)
+            dst.cache = jax.tree_util.tree_map(
+                lambda dc, sc: dc.at[:, d].set(sc[:, s]),
+                dst.cache, src.cache)
+        # control plane: hand the request off.  Pending fused-path tokens
+        # reference src.requests by id — resolve them before the pop.
+        src.flush_tokens()
+        req = src.requests.pop(ev.owner)
+        if ev.owner in src.queue:
+            src.queue.remove(ev.owner)
+        if ev.owner in src.running:
+            src.running.remove(ev.owner)
+        req.state = ReqState.WAITING
+        req.pages, req.blocked_admits = [], 0
+        dst.requests[ev.owner] = req
+        dst.sched.submit(ev.owner)
+        # admission on dst finds the migrated live lease in its plane and
+        # resumes prefill at lease.resume_tokens — nothing recomputes
+        self.stats.requests_rescued += 1
+        self.rescues.append((ev.owner, ev.src_pool, ev.dst_pool))
 
     # ------------------------------------------------------------------
     # Drive loop

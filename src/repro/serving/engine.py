@@ -93,6 +93,16 @@ class EngineConfig:
     # batch (kernels.paged_attention.prefix): each shared physical page is
     # read once per batch instead of once per request.
     prefix_shared_attention: bool = False
+    # Tensor-parallel serving: a jax.sharding.Mesh to run every dispatch
+    # across.  Params/cache shard by SERVE_RULES (heads/kv_heads/ffn/vocab
+    # over 'model', batch over 'data'; the KV page axis stays unsharded so
+    # the pool's handle space is mesh-global), resolved shape-aware so
+    # indivisible dims relocate instead of failing.  None — the default —
+    # is the identity single-device path: drain output is bit-identical.
+    # With a mesh, decode_kernel=None resolves to the oracle path (GSPMD
+    # partitions the jnp attention; the Pallas kernel is opted into
+    # explicitly where the backend supports sharded custom calls).
+    mesh: Optional[object] = None
 
     def scheduler_config(self) -> SchedulerConfig:
         return SchedulerConfig(
@@ -146,6 +156,21 @@ class Engine:
         else:
             self.session = PoolSession(self.pool, self.cfg.klass)
         self.cache = model.init_cache(None, engine_pages=self.pool.n_pages)
+        # tensor-parallel plane: commit params and KV cache to their
+        # SERVE_RULES shardings up front so every dispatch compiles against
+        # stable shardings (no per-call input resharding / signature churn)
+        self.mesh = self.cfg.mesh
+        self._c_sharding = None
+        if self.mesh is not None:
+            from repro.distributed.sharding import (SERVE_RULES,
+                                                    tree_spec_shaped)
+            p_sh = tree_spec_shaped(model.param_axes(), self.params,
+                                    SERVE_RULES, self.mesh)
+            self._c_sharding = tree_spec_shaped(
+                model.cache_axes(None, engine_pages=self.pool.n_pages),
+                self.cache, SERVE_RULES, self.mesh)
+            self.params = jax.device_put(self.params, p_sh)
+            self.cache = jax.device_put(self.cache, self._c_sharding)
         self.pg = self.mcfg.page_size
         self.maxp = self.cfg.max_seq // self.pg
         self.requests: Dict[str, Request] = {}
@@ -160,14 +185,34 @@ class Engine:
             'engine serves paged-KV decoder-only families'
         decode_kernel = self.cfg.decode_kernel
         if decode_kernel is None:
-            decode_kernel = jax.default_backend() == 'tpu'
+            decode_kernel = (jax.default_backend() == 'tpu'
+                             and self.mesh is None)
         # donate the KV cache buffers to the jitted step so the pools
         # update in place (donation is a no-op on CPU and would only warn)
         donate = (1,) if jax.default_backend() in ('tpu', 'gpu') else ()
+        # mesh path: trace under the SERVE_RULES context so the models'
+        # `constrain` calls become real sharding constraints, and pin the
+        # cache's output sharding to its input sharding so the carried
+        # cache never drifts (drift would re-specialize the jit signature
+        # every step)
+        if self.mesh is not None:
+            from repro.distributed.sharding import SERVE_RULES, axis_rules
+            mesh = self.mesh
+
+            def _traced(fn):
+                def wrapped(*args):
+                    with axis_rules(mesh, SERVE_RULES):
+                        return fn(*args)
+                return wrapped
+            jit_kw = {'out_shardings': (self._c_sharding, None)}
+        else:
+            def _traced(fn):
+                return fn
+            jit_kw = {}
         self._decode = jax.jit(
-            lambda p, c, b, k=decode_kernel: model.decode_fn(
-                p, c, b, use_pallas=k),
-            donate_argnums=donate)
+            _traced(lambda p, c, b, k=decode_kernel: model.decode_fn(
+                p, c, b, use_pallas=k)),
+            donate_argnums=donate, **jit_kw)
         if self.cfg.fused_sampling:
             temp = float(self.cfg.temperature)
 
@@ -181,14 +226,15 @@ class Engine:
                                          db['tokens'])
                 return model.decode_sample_fn(p, c, db, use_pallas=k,
                                               temperature=t)
-            self._fused_decode = jax.jit(fused_fn, donate_argnums=donate)
+            self._fused_decode = jax.jit(_traced(fused_fn),
+                                         donate_argnums=donate, **jit_kw)
             # see the module-import async-dispatch note at the top of this
             # file; the per-step block below is the backstop for processes
             # whose CPU client predates that config update
             self._cpu_step_sync = jax.default_backend() == 'cpu'
         chunk_fn = model.mod.prefill_chunk
         self._mixed = jax.jit(
-            lambda p, c, b: chunk_fn(self.mcfg, p, c, b))
+            _traced(lambda p, c, b: chunk_fn(self.mcfg, p, c, b)), **jit_kw)
         self._init_buffers()
         # lazy-token bookkeeping (fused path): device arrays whose values
         # have not been copied to req.generated yet, and the row map of

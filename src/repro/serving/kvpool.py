@@ -27,11 +27,16 @@ scheduler tick; ``check_invariants`` cross-checks them against full scans.
 """
 from __future__ import annotations
 
+import itertools
 from collections import OrderedDict, deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set
 
 QUARANTINE_PAGE = 0
+
+# default pool names ('pool0', 'pool1', …) — stable within a process so
+# PageMigration events can name src/dst pools without explicit naming
+_POOL_SEQ = itertools.count()
 
 
 @dataclass
@@ -45,12 +50,18 @@ class PoolStats:
 
 class KVPool:
     def __init__(self, n_handles: int, pages_per_handle: int,
-                 page_size: int = 16, reserved_handles: int = 1):
+                 page_size: int = 16, reserved_handles: int = 1,
+                 name: Optional[str] = None):
         assert n_handles >= 1 and pages_per_handle >= 1
         self.n_handles = n_handles
         self.pph = pages_per_handle
         self.page_size = page_size
         self.n_pages = 1 + n_handles * pages_per_handle
+        self.name = name or f'pool{next(_POOL_SEQ)}'
+        # optional typed event stream (repro.core.events.EventBus): when a
+        # runtime/orchestrator attaches one, transfer_pages publishes a
+        # PageMigration per ownership move so transfers are observable
+        self.bus = None
 
         # page → owning id (None = free); page 0 is never owned
         self.owner: List[Optional[str]] = [None] * self.n_pages
@@ -238,11 +249,28 @@ class KVPool:
         return freed
 
     def transfer_pages(self, old_owner: str, pages: Sequence[int],
-                       new_owner: str) -> None:
-        """Re-key pages from one owner id to another (memory-plane use:
-        shared pages outliving their creating lease move to an internal
-        block id so the request id can be re-admitted).  Klass-preserving;
-        no page moves physically."""
+                       new_owner: str,
+                       dst_pool: Optional['KVPool'] = None
+                       ) -> Optional[List[int]]:
+        """Move pages from one owner id to another.
+
+        Intra-pool (``dst_pool`` None or self): pure ownership re-key
+        (memory-plane use: shared pages outliving their creating lease
+        move to an internal block id so the request id can be
+        re-admitted).  Klass-preserving; no page moves physically; returns
+        the (unchanged) page ids.
+
+        Cross-pool (``dst_pool`` another KVPool): the Valve rescue path —
+        allocate the same count in ``dst_pool`` under ``new_owner``
+        (klass-preserving), free the source pages here, and return the
+        NEW page ids in the destination pool (page ids are pool-local).
+        Returns None — with the source untouched — if the destination
+        cannot fit the transfer.  Either pool with a bus attached
+        publishes a typed PageMigration event.
+        """
+        if dst_pool is not None and dst_pool is not self:
+            return self._transfer_cross_pool(old_owner, list(pages),
+                                             new_owner, dst_pool)
         held = self.pages_of[old_owner]
         klass = self.klass_of[old_owner]
         moved = 0
@@ -258,6 +286,38 @@ class KVPool:
         if not held:
             del self.pages_of[old_owner]
             self.klass_of.pop(old_owner, None)
+        if moved and self.bus is not None:
+            self._publish_migration(new_owner, pages)
+        return list(pages)
+
+    def _transfer_cross_pool(self, old_owner: str, pages: List[int],
+                             new_owner: str, dst: 'KVPool'
+                             ) -> Optional[List[int]]:
+        klass = self.klass_of[old_owner]
+        for p in pages:
+            assert self.owner[p] == old_owner, (p, self.owner[p], old_owner)
+        if new_owner in dst.pages_of:
+            got = dst.alloc_more(new_owner, len(pages))
+        else:
+            got = dst.alloc(new_owner, len(pages), klass)
+        if got is None:
+            return None             # destination full — source untouched
+        self.free_pages(old_owner, pages)
+        for bus in {id(self.bus): self.bus, id(dst.bus): dst.bus}.values():
+            if bus is not None:
+                from repro.core.events import PageMigration
+                bus.publish(PageMigration, owner=new_owner,
+                            n_pages=len(pages), src_pool=self.name,
+                            dst_pool=dst.name, cross_pool=True,
+                            src_pages=tuple(pages), dst_pages=tuple(got))
+        return got
+
+    def _publish_migration(self, owner: str, pages: Sequence[int]) -> None:
+        from repro.core.events import PageMigration
+        self.bus.publish(PageMigration, owner=owner, n_pages=len(pages),
+                         src_pool=self.name, dst_pool=self.name,
+                         cross_pool=False, src_pages=tuple(pages),
+                         dst_pages=tuple(pages))
 
     def _release_page(self, p: int) -> None:
         self.owner[p] = None

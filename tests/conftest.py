@@ -1,0 +1,54 @@
+"""Shared test fixtures: virtual multi-device CPU topology.
+
+``launch/dryrun.py`` pioneered the trick: XLA's host platform can present
+N virtual devices (``--xla_force_host_platform_device_count``) so mesh
+code paths — sharded jit, shard_map collectives, gate fanout sized off a
+mesh — run on single-CPU CI.  The flag only takes effect if it is set
+before the first ``jax`` import anywhere in the process, which is why it
+lives at module scope in the root conftest (pytest imports conftest before
+any test module).
+
+``tests/test_distributed.py`` is unaffected: it launches subprocesses
+with an explicit per-child ``XLA_FLAGS``.
+"""
+import os
+
+N_VIRTUAL_DEVICES = 8
+
+_flag = f'--xla_force_host_platform_device_count={N_VIRTUAL_DEVICES}'
+if 'xla_force_host_platform_device_count' not in os.environ.get('XLA_FLAGS', ''):
+    os.environ['XLA_FLAGS'] = f"{os.environ.get('XLA_FLAGS', '')} {_flag}".strip()
+os.environ.setdefault('JAX_PLATFORMS', 'cpu')
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope='session')
+def virtual_devices():
+    """All virtual CPU devices (≥ N_VIRTUAL_DEVICES when the flag landed
+    before jax initialized; skip dependents if something beat us to it)."""
+    import jax
+    devs = jax.devices()
+    if len(devs) < 4:
+        pytest.skip(f'virtual device flag ineffective ({len(devs)} devices)')
+    return devs
+
+
+@pytest.fixture(scope='session')
+def make_virtual_mesh(virtual_devices):
+    """Build a Mesh over the first prod(shape) virtual devices.
+
+    ``make_virtual_mesh((4,), ('model',))`` → 4-way tensor-parallel mesh;
+    ``make_virtual_mesh((2, 2), ('data', 'model'))`` → 2×2.
+    """
+    from jax.sharding import Mesh
+
+    def make(shape, axis_names):
+        n = int(np.prod(shape))
+        if n > len(virtual_devices):
+            pytest.skip(f'need {n} devices, have {len(virtual_devices)}')
+        devs = np.asarray(virtual_devices[:n]).reshape(shape)
+        return Mesh(devs, axis_names)
+
+    return make

@@ -1,0 +1,182 @@
+"""Cross-pool KV rescue end-to-end at the node level.
+
+A reclamation victim on the runtime pool is *migrated* — whole lease,
+surviving every token — to an auxiliary pool instead of truncated, the
+orchestrator copies the physical KV rows and hands the Request to an
+engine serving that pool, and generation resumes with ZERO recomputed
+tokens: the rescued output is bit-equal to an undisturbed run.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.clock import VirtualClock
+from repro.core.events import PageMigration, ReclamationEvent
+from repro.core.memory import MemoryPlane
+from repro.core.runtime import RuntimeConfig, ValveRuntime
+from repro.launch.node import NodeOrchestrator
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.kvpool import KVPool
+
+ARCH = 'qwen3-0.6b'
+
+
+def _ecfg(klass):
+    return EngineConfig(max_batch=4, max_seq=48, prefill_chunk=8,
+                        klass=klass)
+
+
+def _node(*, aux_pool=True):
+    """Runtime pool A (tight: 5×4 pages) + auxiliary pool B (spacious).
+
+    All engines share one architecture and ONE param seed, so a rescued
+    request's KV rows are valid under the destination engine's weights and
+    greedy continuation is bit-deterministic across the handoff."""
+    pool = KVPool(5, 4, page_size=4, reserved_handles=1, name='poolA')
+    clock = VirtualClock()
+    rt = ValveRuntime(pool, RuntimeConfig(n_devices=1, t_cool_init=0.002),
+                      clock=clock)
+    node = NodeOrchestrator(rt, idle_advance=1e-3)
+    cfg = reduced(get_config(ARCH), page_size=4)
+    node.add_engine(cfg, _ecfg('online'), seed=0, name='online')
+    node.add_engine(cfg, _ecfg('offline'), seed=0, name='offA')
+    if aux_pool:
+        pool_b = node.add_pool(KVPool(8, 4, page_size=4, name='poolB'))
+        node.add_engine(cfg, _ecfg('offline'), seed=0, name='offB',
+                        pool=pool_b)
+    return node
+
+
+def _engine_holding(node, rid):
+    for eng in node.engines:
+        if rid in eng.requests:
+            return eng
+    raise AssertionError(f'{rid} not held by any engine')
+
+
+def _run(disturb):
+    node = _node()
+    rng = np.random.default_rng(7)
+    eng = node.names['offA']
+    rids = [eng.submit(rng.integers(1, eng.mcfg.vocab_size, 12).tolist(),
+                       max_new_tokens=8) for _ in range(2)]
+    for _ in range(4):                    # prefill done, decode under way
+        node.step()
+    if disturb:
+        # 28-token prompt + 12 new = 10 pages >> the 4-page reservation →
+        # reclamation must take offline handles → rescue to pool B
+        on_rid = node.online.submit(
+            rng.integers(1, node.online.mcfg.vocab_size, 28).tolist(),
+            max_new_tokens=12)
+    node.drain(max_steps=5000)
+    if disturb:
+        assert len(node.online.output_tokens(on_rid)) == 12
+    return node, rids
+
+
+def test_rescue_zero_recompute_bit_equal():
+    ref_node, ref_rids = _run(disturb=False)
+    ref_out = [_engine_holding(ref_node, r).output_tokens(r)
+               for r in ref_rids]
+
+    node, rids = _run(disturb=True)
+
+    # the burst actually forced a cross-pool rescue
+    assert node.stats.migrations_seen >= 1
+    assert node.stats.requests_rescued >= 1
+    assert node.rescues and all(sp == 'poolA' and dp == 'poolB'
+                                for _, sp, dp in node.rescues)
+    rescued = {rid for rid, _, _ in node.rescues}
+    assert rescued <= set(rids)
+
+    # rescued requests finished ON the pool-B engine with the undisturbed
+    # outputs — the KV-row copy carried every token across, nothing was
+    # recomputed (greedy decode would diverge from ref on any lost page)
+    dst = node.names['offB']
+    for rid in rescued:
+        assert _engine_holding(node, rid) is dst
+        req = dst.requests[rid]
+        assert req.recomputes == 0
+    assert dst.stats.tokens_recomputed == 0
+    assert dst.stats.invalidations == 0
+    got = [_engine_holding(node, r).output_tokens(r) for r in rids]
+    assert got == ref_out
+
+    # telemetry folded the migration from the event stream
+    snap = node.runtime.telemetry.snapshot()
+    assert snap['pages_migrated'] >= 1
+    assert snap['requests_migrated'] == len(node.rescues)
+    evs = [e for e in node.runtime.bus.events(PageMigration) if e.cross_pool]
+    assert len(evs) == node.stats.migrations_seen
+    for ev in evs:
+        assert ev.src_pool == 'poolA' and ev.dst_pool == 'poolB'
+        assert len(ev.src_pages) == len(ev.dst_pages) == ev.n_pages > 0
+
+    # rescued victims are NOT counted as reclamation damage: the
+    # ReclamationEvent lists only truncated requests, never rescued ones
+    for ev in node.runtime.bus.events(ReclamationEvent):
+        assert not (set(ev.requests) & rescued)
+
+    # routes died with the migrated leases; both pools/planes consistent
+    assert node.runtime.invalidation_routes() == []
+    node.runtime.check_invariants()
+    node.pool.check_invariants()
+    for p in node.pools:
+        p.check_invariants()
+        MemoryPlane.of(p).check_invariants()
+    node.runtime.memory.check_invariants()
+
+
+def test_no_aux_pool_falls_back_to_truncation():
+    """Without a migration target the same burst degrades to the PR-5
+    behavior: victims are truncated and recompute on the source engine."""
+    node, rids = _run(disturb=True)
+    base, base_rids = None, None
+    try:
+        base, base_rids = _node(aux_pool=False), None
+    finally:
+        pass
+    rng = np.random.default_rng(7)
+    eng = base.names['offA']
+    base_rids = [eng.submit(
+        rng.integers(1, eng.mcfg.vocab_size, 12).tolist(),
+        max_new_tokens=8) for _ in range(2)]
+    for _ in range(4):
+        base.step()
+    base.online.submit(
+        rng.integers(1, base.online.mcfg.vocab_size, 28).tolist(),
+        max_new_tokens=12)
+    base.drain(max_steps=5000)
+
+    assert base.stats.migrations_seen == 0
+    assert base.names['offA'].stats.invalidations >= 1
+    assert base.names['offA'].stats.tokens_recomputed > 0
+    # ... whereas the rescue path recomputed nothing anywhere offline
+    assert node.names['offB'].stats.tokens_recomputed == 0
+    # both converge to the same outputs (recompute is correct, just wasteful)
+    ref = [_engine_holding(node, r).output_tokens(r) for r in rids]
+    got = [base.names['offA'].output_tokens(r) for r in base_rids]
+    assert got == ref
+
+
+def test_add_pool_and_register_guards():
+    node = _node()
+    cfg = reduced(get_config(ARCH), page_size=4)
+    with pytest.raises(AssertionError):
+        node.add_pool(node.pools[0])              # already registered
+    with pytest.raises(AssertionError):
+        node.add_pool(node.pool)                  # the runtime pool itself
+    with pytest.raises(AssertionError):
+        node.add_pool(KVPool(4, 4, page_size=8))  # page-size mismatch
+    # pool-backed engines must serve a registered aux pool, offline only
+    rogue = KVPool(4, 4, page_size=4)
+    from repro.models.api import build_model
+    import jax
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(AssertionError):
+        node.register(Engine(model, params, rogue, _ecfg('offline'),
+                             clock=node.clock))
+    with pytest.raises(AssertionError):
+        node.register(Engine(model, params, node.pools[0], _ecfg('online'),
+                             clock=node.clock))

@@ -1,0 +1,72 @@
+"""logical_to_spec edge cases over SERVE_RULES/TRAIN_RULES on 1/2/3-axis
+meshes (no hypothesis dependency — test_sharding.py skips without it).
+
+The contract under test: a rule mapping to a tuple whose axes are *all*
+absent from the mesh resolves to ``None`` (replicated) — never an empty
+tuple, never a name the mesh does not provide.
+"""
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import (SERVE_RULES, TRAIN_RULES,
+                                        logical_to_spec)
+
+
+def _mesh_of(axis_names):
+    devs = np.asarray(jax.devices()[:1]).reshape((1,) * len(axis_names))
+    return Mesh(devs, axis_names)
+
+
+MESHES = {
+    1: _mesh_of(('model',)),
+    2: _mesh_of(('data', 'model')),
+    3: _mesh_of(('pod', 'data', 'model')),
+}
+
+LOGICAL = ['batch', 'seq', 'heads', 'kv_heads', 'head_dim', 'embed',
+           'ffn', 'vocab', 'qkv', 'layers', 'pages', None]
+
+
+@pytest.mark.parametrize('n_axes', [1, 2, 3])
+@pytest.mark.parametrize('rules', [SERVE_RULES, TRAIN_RULES],
+                         ids=['serve', 'train'])
+def test_never_yields_empty_tuple_or_absent_axis(n_axes, rules):
+    mesh = MESHES[n_axes]
+    for a in LOGICAL:
+        for b in LOGICAL:
+            spec = logical_to_spec((a, b), rules, mesh)
+            for part in spec:
+                assert part != (), (a, b, mesh.axis_names)
+                names = (part,) if isinstance(part, str) else (part or ())
+                assert all(n in mesh.axis_names for n in names), (a, b, spec)
+
+
+@pytest.mark.parametrize('n_axes', [1, 2, 3])
+def test_all_absent_tuple_is_replicated(n_axes):
+    # batch -> ('pod', 'data'): on a model-only mesh both are absent —
+    # the dim must be replicated (None entry / trailing trim), not ().
+    spec = logical_to_spec(('batch', 'heads'), SERVE_RULES, MESHES[n_axes])
+    want = {1: P(None, 'model'),
+            2: P('data', 'model'),
+            3: P(('pod', 'data'), 'model')}[n_axes]
+    assert spec == want
+    assert logical_to_spec(('batch',), SERVE_RULES, MESHES[1]) == P()
+
+
+def test_without_mesh_is_fully_replicated():
+    # mesh=None has no axes: nothing to shard over, so every rule —
+    # including tuple-valued ones — resolves replicated.  The old
+    # passthrough named axes no mesh provides.
+    assert logical_to_spec(('batch', 'heads', 'embed'), SERVE_RULES) == P()
+    assert logical_to_spec(('batch', 'seq'), TRAIN_RULES, None) == P()
+
+
+def test_crafted_absent_rules():
+    # rules whose mapped axes exist nowhere in a ('data','model') mesh
+    mesh = MESHES[2]
+    rules = {'x': ('pod', 'expertpar'), 'y': 'model'}
+    assert logical_to_spec(('x', 'y'), rules, mesh) == P(None, 'model')
+    assert logical_to_spec(('y', 'x'), rules, mesh) == P('model')
