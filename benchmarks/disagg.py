@@ -1,0 +1,256 @@
+"""Disaggregated vs colocated serving: same trace, hard correctness gates.
+
+One online trace (staggered submissions, fixed per-step virtual time) plus
+an equal offline backfill demand, driven through two topologies:
+
+1. **colocated** — a single Valve node: one pool, one online engine, two
+   offline engines (the PR-5..8 serving plane);
+2. **disagg** — a :class:`~repro.serving.disagg.DisaggPlane`: prefill and
+   decode nodes over separate pools, each with its own offline engine,
+   joined by migration-based KV handoff.
+
+Virtual time advances a fixed ``dt`` per plane step, so TTFT/TPOT are
+deterministic step counts in disguise — differences between the two
+topologies are attributable, not noise.
+
+Hard gates (raise, not assert — they must hold under ``-O``), enforced
+here and by ``scripts/ci.sh --smoke``:
+
+- **bit identity**: every online request's token sequence is identical
+  between the two topologies (greedy decode diverges on any lost or
+  wrongly-resumed KV, so equality is the end-to-end witness);
+- **zero recompute at handoff**: every online request hands off exactly
+  once, and no prefilled token is ever computed again — the telemetry
+  fold, the decode engine counter, and each request's ``recomputes`` all
+  read 0;
+- **joint preemption bound**: every runtime (colocated, prefill, decode)
+  reports ``max_preemptions_per_request ≤ 1`` — the paper's bound holds
+  per (request, device) across the split.
+
+Reported (the trajectory): TTFT/TPOT p50/p99 per topology, offline
+backfill tokens, handoff count/pages/latency, and the interference ratios
+(disagg ÷ colocated) for the online tail latencies.
+
+Writes ``results/disagg.json`` and mirrors ``BENCH_disagg.json`` at the
+repo root.  ``--smoke`` shrinks the trace and writes under ``results/``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+import numpy as np
+
+ARCH = 'qwen3-0.6b'
+DT = 1e-3                   # virtual seconds per plane step
+
+
+def _ecfg(klass):
+    from repro.serving.engine import EngineConfig
+    return EngineConfig(max_batch=4, max_seq=48, prefill_chunk=8,
+                        klass=klass)
+
+
+def _prompt(vocab, n, seed):
+    return np.random.default_rng(seed).integers(1, vocab, n).tolist()
+
+
+def _node(pool, clock, *, disaggregated, n_offline_engines, prefix):
+    from repro.configs import get_config, reduced
+    from repro.core.runtime import RuntimeConfig, ValveRuntime
+    from repro.launch.node import NodeOrchestrator
+    rt = ValveRuntime(pool, RuntimeConfig(n_devices=1, t_cool_init=0.002),
+                      clock=clock)
+    node = NodeOrchestrator(rt, idle_advance=1e-3,
+                            disaggregated=disaggregated)
+    cfg = reduced(get_config(ARCH), page_size=4)
+    node.add_engine(cfg, _ecfg('online'), seed=0, name=f'{prefix}online')
+    for i in range(n_offline_engines):
+        node.add_engine(cfg, _ecfg('offline'), seed=0,
+                        name=f'{prefix}off{i}')
+    return node
+
+
+def _mk_colocated():
+    from repro.core.clock import VirtualClock
+    from repro.serving.kvpool import KVPool
+    return _node(KVPool(10, 4, page_size=4, reserved_handles=5,
+                        name='colo'),
+                 VirtualClock(), disaggregated=False,
+                 n_offline_engines=2, prefix='')
+
+
+def _mk_disagg():
+    from repro.core.clock import VirtualClock
+    from repro.serving.disagg import DisaggPlane
+    from repro.serving.kvpool import KVPool
+    clock = VirtualClock()
+    prefill = _node(KVPool(10, 4, page_size=4, reserved_handles=5,
+                           name='prefill'),
+                    clock, disaggregated=True, n_offline_engines=1,
+                    prefix='p-')
+    decode = _node(KVPool(10, 4, page_size=4, reserved_handles=7,
+                          name='decode'),
+                   clock, disaggregated=True, n_offline_engines=1,
+                   prefix='d-')
+    return DisaggPlane(prefill, decode)
+
+
+def _drive(target, *, n_online: int, gap: int, n_offline: int,
+           max_steps: int = 200_000):
+    """Replay the shared trace: offline backlog first (round-robin over
+    the target's offline engines), then one online request every ``gap``
+    steps; the clock advances DT per step."""
+    clock = target.clock
+    vocab = target.online.mcfg.vocab_size
+    offline = list(target.offline)
+    off = [(offline[i % len(offline)],
+            offline[i % len(offline)].submit(_prompt(vocab, 8, 200 + i),
+                                             max_new_tokens=8))
+           for i in range(n_offline)]
+    for _ in range(4):                      # offline decode under way
+        clock.advance(DT)
+        target.step()
+    rids: List[str] = []
+    for step in range(max_steps):
+        if len(rids) < n_online and step % gap == 0:
+            rids.append(target.online.submit(
+                _prompt(vocab, 12, 40 + len(rids)), max_new_tokens=8))
+        clock.advance(DT)
+        target.step()
+        if len(rids) == n_online and not target.has_work():
+            break
+    if target.has_work():
+        raise RuntimeError(f'trace did not drain in {max_steps} steps')
+    return rids, off
+
+
+def _pct(xs, q):
+    return float(np.percentile(xs, q)) if xs else None
+
+
+def _measure(target, label: str, *, n_online, gap, n_offline) -> Dict:
+    rids, off = _drive(target, n_online=n_online, gap=gap,
+                       n_offline=n_offline)
+    reqs = [target.engine_of(r).requests[r] for r in rids]
+    outs = [target.engine_of(r).output_tokens(r) for r in rids]
+    for eng, rid in off:
+        if len(eng.output_tokens(rid)) != 8:
+            raise RuntimeError(f'{label}: offline {rid} incomplete')
+    ttfts = [r.ttft for r in reqs if r.ttft is not None]
+    tpots = [r.tpot for r in reqs if r.tpot and r.tpot > 0]
+    res = {
+        'online_finished': len(rids),
+        'ttft_p50_ms': _pct(ttfts, 50) * 1e3,
+        'ttft_p99_ms': _pct(ttfts, 99) * 1e3,
+        'tpot_p50_ms': _pct(tpots, 50) * 1e3,
+        'tpot_p99_ms': _pct(tpots, 99) * 1e3,
+        'offline_tokens': sum(e.stats.tokens_generated
+                              for e in target.offline),
+        'online_recomputes': sum(r.recomputes for r in reqs),
+        '_outputs': outs,
+    }
+    return res
+
+
+def run(*, n_online: int = 8, gap: int = 6, n_offline: int = 4,
+        out_path: str = 'results/disagg.json',
+        bench_path: str = 'BENCH_disagg.json') -> Dict:
+    colo = _mk_colocated()
+    c = _measure(colo, 'colocated', n_online=n_online, gap=gap,
+                 n_offline=n_offline)
+    colo.runtime.check_invariants()
+
+    plane = _mk_disagg()
+    d = _measure(plane, 'disagg', n_online=n_online, gap=gap,
+                 n_offline=n_offline)
+    plane.check_invariants()
+
+    # ---- hard gate 1: bit identity across the topologies -------------
+    if d.pop('_outputs') != c.pop('_outputs'):
+        raise RuntimeError(
+            'disagg online outputs diverged from colocated (same trace, '
+            'same seed) — the handoff corrupted or lost KV state')
+
+    # ---- hard gate 2: every request handed off, nothing recomputed ---
+    if plane.stats.handoffs != n_online:
+        raise RuntimeError(
+            f'{plane.stats.handoffs}/{n_online} requests handed off '
+            f'({plane.stats.handoffs_deferred} deferred) — the decode '
+            f'pool must be provisioned to accept every prefill')
+    recomputed = plane.decode.online.stats.tokens_recomputed
+    tel_p = plane.prefill.runtime.telemetry.snapshot()
+    tel_d = plane.decode.runtime.telemetry.snapshot()
+    for side, tel in (('prefill', tel_p), ('decode', tel_d)):
+        if tel['handoff_recompute_tokens'] != 0:
+            raise RuntimeError(
+                f"{side} telemetry charged "
+                f"{tel['handoff_recompute_tokens']} recomputed handoff "
+                f"tokens (contract: 0)")
+    if recomputed != 0 or d['online_recomputes'] != 0:
+        raise RuntimeError(
+            f'handoff recompute != 0 (engine={recomputed}, '
+            f"requests={d['online_recomputes']})")
+
+    # ---- hard gate 3: joint preemption bound -------------------------
+    bounds = {
+        'colocated':
+            colo.runtime.telemetry.snapshot()['max_preemptions_per_request'],
+        'prefill': tel_p['max_preemptions_per_request'],
+        'decode': tel_d['max_preemptions_per_request'],
+    }
+    for side, b in bounds.items():
+        if b > 1:
+            raise RuntimeError(
+                f'{side}: max_preemptions_per_request {b} > 1 '
+                f'(§4.2 joint bound violated)')
+
+    d.update(
+        handoffs=plane.stats.handoffs,
+        handoffs_deferred=plane.stats.handoffs_deferred,
+        pages_copied=plane.stats.pages_copied,
+        handoff_latency_ms={
+            k: (v * 1e3 if isinstance(v, float) else v)
+            for k, v in tel_p['handoff_latency'].items()},
+        handoff_recompute_tokens=0)
+    interference = {
+        'ttft_p99_ratio': d['ttft_p99_ms'] / c['ttft_p99_ms'],
+        'tpot_p99_ratio': d['tpot_p99_ms'] / c['tpot_p99_ms'],
+    }
+    for tag, r in (('colocated', c), ('disagg   ', d)):
+        print(f"{tag}: ttft p50/p99 = {r['ttft_p50_ms']:6.2f}/"
+              f"{r['ttft_p99_ms']:6.2f} ms  tpot p50/p99 = "
+              f"{r['tpot_p50_ms']:5.2f}/{r['tpot_p99_ms']:5.2f} ms  "
+              f"offline={r['offline_tokens']} tok")
+    print(f"handoffs={d['handoffs']} (deferred {d['handoffs_deferred']})  "
+          f"pages={d['pages_copied']}  recompute=0  "
+          f"preempt_bound={max(bounds.values())}")
+
+    result = {
+        'trace': {'n_online': n_online, 'gap_steps': gap,
+                  'n_offline': n_offline, 'dt_s': DT, 'arch': ARCH},
+        'colocated': c,
+        'disagg': d,
+        'interference': interference,
+        'gates': {'bit_identical': True,
+                  'handoff_recompute_tokens': 0,
+                  'max_preemptions_per_request': max(bounds.values())},
+    }
+    os.makedirs(os.path.dirname(out_path) or '.', exist_ok=True)
+    for path in (out_path, bench_path):
+        with open(path, 'w') as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+if __name__ == '__main__':
+    import sys
+    if '--smoke' in sys.argv:
+        run(n_online=3, gap=6, n_offline=2,
+            out_path='results/disagg_smoke.json',
+            bench_path='results/disagg_smoke.json')
+        print('disagg smoke OK: bit-identical, zero-recompute handoff, '
+              'preemption bound ≤ 1')
+    else:
+        run()

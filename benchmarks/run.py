@@ -31,6 +31,8 @@ BENCHES = [
     ('prefix_reuse', 'memory plane v1 — prefix sharing + partial-invalidation tax'),
     ('kernel_hotpath', 'kernel hot path — fused sampling + prefix-shared decode step'),
     ('shard_scale', 'multi-device plane — mesh scaling + cross-pool rescue tax'),
+    ('disagg', 'disaggregated plane — prefill/decode split vs colocated, '
+               'zero-recompute handoff'),
 ]
 
 
@@ -67,6 +69,8 @@ def main():
                 mod.run(warm=12, steps=24, gen=64)
             elif args.fast and name == 'shard_scale':
                 mod.run(mesh_sizes=(1, 2, 4), warm=12, steps=16, gen=64)
+            elif args.fast and name == 'disagg':
+                mod.run(n_online=4, gap=6, n_offline=2)
             else:
                 mod.run()
         except Exception:

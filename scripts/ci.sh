@@ -148,6 +148,9 @@ python benchmarks/kernel_hotpath.py --smoke
 echo "== shard-scale smoke (mesh parity + zero-recompute rescue gate) =="
 python benchmarks/shard_scale.py --smoke
 
+echo "== disagg smoke (2-pool handoff: bit-identity + zero-recompute gate) =="
+python benchmarks/disagg.py --smoke
+
 echo "== tier-1 =="
 python -m pytest -x -q
 

@@ -12,7 +12,9 @@ counters, so all of them observe the *same ordered facts*:
 - :class:`ReservationChangeEvent` — MIAD moved the reserved-handle set H;
 - :class:`MemoryPressureEvent`  — an online allocation overflowed H;
 - :class:`PageMigration`        — KV pages changed owner/pool (cross-pool
-  rescue of a reclamation victim, or an intra-pool ownership re-key).
+  rescue of a reclamation victim, or an intra-pool ownership re-key);
+- :class:`PrefillHandoff`       — a finished prefill's KV lease moved to
+  the decode pool of a disaggregated plane (serving/disagg).
 
 The paper's §5 ordering rule ("compute first") and the §4.2 rate bound
 ("≤ 1 preemption per request", wake only after T_cool) become *checkable
@@ -36,7 +38,7 @@ from typing import (
 __all__ = [
     'RuntimeEvent', 'PreemptionEvent', 'ReclamationEvent', 'WakeupEvent',
     'ReservationChangeEvent', 'MemoryPressureEvent', 'PageMigration',
-    'EventBus', 'EVENT_TYPES', 'check_event_ordering',
+    'PrefillHandoff', 'EventBus', 'EVENT_TYPES', 'check_event_ordering',
 ]
 
 
@@ -73,6 +75,11 @@ class ReclamationEvent(NamedTuple):
     pages: int = 0
     gate_closed: bool = True
     killed: bool = False                # baselines kill instead of invalidate
+    # victims rescued by cross-pool migration instead of truncated: each
+    # must have an earlier cross-pool PageMigration in the same log (the
+    # data-plane copy runs at that publish, before this event's freed
+    # source pages can be reallocated) — checked by check_event_ordering
+    rescued: Tuple[str, ...] = ()
 
 
 class WakeupEvent(NamedTuple):
@@ -131,9 +138,36 @@ class PageMigration(NamedTuple):
     dst_pages: Tuple[int, ...] = ()
 
 
+class PrefillHandoff(NamedTuple):
+    """A finished prefill's whole KV lease moved to the decode pool.
+
+    Published by the disaggregated serving plane
+    (``repro.serving.disagg.DisaggPlane``) on *both* pools' buses once the
+    ``MemoryPlane.migrate`` / ``PageMigration`` data-plane copy has
+    re-homed the request onto a decode engine.  ``recompute_tokens`` is
+    the number of already-materialized prefill tokens the decode side
+    will compute again — the disaggregation contract requires 0 (the
+    lease carries its fill point, so decode admission resumes at
+    ``lease.resume_tokens``).  ``latency_s`` measures first-token time →
+    handoff completion (how long finished-prefill KV waited on the
+    prefill pool); the queue depths snapshot both online engines
+    (waiting + running) at publish time for interference analysis.
+    """
+    seq: int
+    t: float
+    req_id: str = ''
+    src_pool: str = ''
+    dst_pool: str = ''
+    pages_copied: int = 0
+    latency_s: float = 0.0
+    recompute_tokens: int = 0
+    prefill_queue_depth: int = 0
+    decode_queue_depth: int = 0
+
+
 EVENT_TYPES: Tuple[type, ...] = (
     PreemptionEvent, ReclamationEvent, WakeupEvent, ReservationChangeEvent,
-    MemoryPressureEvent, PageMigration)
+    MemoryPressureEvent, PageMigration, PrefillHandoff)
 
 
 class RuntimeEvent(abc.ABC):
@@ -238,17 +272,33 @@ def check_event_ordering(events: List[RuntimeEvent], *,
       baseline strategies legitimately violate it, that's their flaw);
     - §4.2 wake rule: every :class:`WakeupEvent` satisfies
       ``idle_for_s ≥ t_cool_s`` (within float tolerance);
+    - copy-before-reallocation: every victim a :class:`ReclamationEvent`
+      reports as ``rescued`` has an *earlier* cross-pool
+      :class:`PageMigration` with that owner — the data-plane KV copy
+      runs synchronously at the migration publish, so migration-before-
+      reclamation in the log proves the copy happened before the freed
+      source pages could be reallocated and overwritten;
     - sequence numbers are strictly increasing and timestamps are
       monotonically non-decreasing (one ordered stream of facts).
     """
     last_seq, last_t = -1, float('-inf')
+    migrated_owners: set = set()
     for ev in events:
         assert ev.seq > last_seq, (ev.seq, last_seq)
         assert ev.t >= last_t - 1e-9, (ev.t, last_t)
         last_seq, last_t = ev.seq, ev.t
-        if isinstance(ev, ReclamationEvent) and require_gate_closed:
-            assert ev.gate_closed, \
-                f'reclamation at t={ev.t} with offline compute enabled (§5)'
+        if isinstance(ev, PageMigration) and ev.cross_pool:
+            migrated_owners.add(ev.owner)
+        if isinstance(ev, ReclamationEvent):
+            if require_gate_closed:
+                assert ev.gate_closed, \
+                    f'reclamation at t={ev.t} with offline compute ' \
+                    f'enabled (§5)'
+            missing = set(ev.rescued) - migrated_owners
+            assert not missing, \
+                f'reclamation at t={ev.t} reports rescued={sorted(missing)}' \
+                f' with no prior cross-pool PageMigration (the data-plane ' \
+                f'copy must precede the reclamation that frees the source)'
         if isinstance(ev, WakeupEvent):
             assert ev.idle_for_s >= ev.t_cool_s - 1e-9, \
                 f'wake-up at t={ev.t} inside T_cool ({ev.idle_for_s} < ' \

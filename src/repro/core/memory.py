@@ -48,7 +48,39 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
 
 from repro.serving.kvpool import KVPool
 
-__all__ = ['KVLease', 'LeaseInvalidation', 'MemoryPlane', 'MemoryPlaneStats']
+__all__ = ['KVLease', 'LeaseInvalidation', 'MemoryPlane', 'MemoryPlaneStats',
+           'MigrationRefusal']
+
+
+class MigrationRefusal:
+    """Falsy, explicit result of a :meth:`MemoryPlane.migrate` that did
+    NOT move the lease (the source is untouched).  Callers that only care
+    about success keep truthiness (``if not moved: ...``); callers that
+    need the cause — the disagg handoff scheduler deferring vs erroring,
+    tests pinning the shared-page rule — read ``reason``:
+
+    ``'unknown-lease'`` — no live lease under that id on this plane;
+    ``'self-target'``   — destination is the source plane;
+    ``'shared-pages'``  — ≥ 1 page is referenced by another lease or held
+    under a foreign pool id (``pinned_pages`` lists them): moving it would
+    tear KV out from under the co-referencing lease, so the caller must
+    fall through to partial truncation;
+    ``'no-capacity'``   — the destination pool could not fit the lease.
+    """
+
+    __slots__ = ('reason', 'pinned_pages')
+
+    def __init__(self, reason: str, pinned_pages: Iterable[int] = ()):
+        self.reason = reason
+        self.pinned_pages = tuple(pinned_pages)
+
+    def __bool__(self) -> bool:
+        return False
+
+    def __repr__(self) -> str:
+        pins = f', pinned_pages={list(self.pinned_pages)}' \
+            if self.pinned_pages else ''
+        return f'MigrationRefusal({self.reason!r}{pins})'
 
 
 class LeaseInvalidation(_Sequence):
@@ -218,6 +250,7 @@ class MemoryPlaneStats:
     # cross-pool rescue
     leases_migrated: int = 0           # victims re-homed to another pool
     pages_migrated: int = 0            # Σ pages moved cross-pool
+    migration_refusals: int = 0        # explicit migrate() refusals
 
 
 class MemoryPlane:
@@ -655,7 +688,7 @@ class MemoryPlane:
     # Cross-pool migration (reclamation-victim rescue)
     # ------------------------------------------------------------------
     def migrate(self, lease_id: str, dst: 'MemoryPlane'
-                ) -> Optional[KVLease]:
+                ) -> 'KVLease | MigrationRefusal':
         """Re-home a live lease to ``dst``'s pool with all KV bookkeeping
         intact (same filled/resume point — zero recompute for the owner).
 
@@ -664,22 +697,25 @@ class MemoryPlane:
         prefix pages are pinned by other leases' references).  Published
         pages a lease still solely holds DO move — their prefix-index
         entries are withdrawn, so no later admission can attach a page
-        that left the pool.  Returns the (same) lease object, now owned by
-        ``dst``, or None if the lease is ineligible or ``dst`` cannot fit
-        it (source untouched on failure)."""
+        that left the pool.  Returns the (same) lease object, now owned
+        by ``dst``, or a falsy :class:`MigrationRefusal` naming why the
+        lease did not move (source untouched on refusal)."""
         lease = self.leases.get(lease_id)
-        if lease is None or lease.released or dst is self:
-            return None
+        if lease is None or lease.released:
+            return self._refuse('unknown-lease')
+        if dst is self:
+            return self._refuse('self-target')
         lid = lease.lease_id
         assert lid not in dst.leases, f'lease id {lid!r} live in target'
         pages = list(lease._pages)
-        for p in pages:
-            if self._page_users.get(p) != {lid} \
-                    or self._page_owner.get(p) != lid:
-                return None
+        pinned = [p for p in pages
+                  if self._page_users.get(p) != {lid}
+                  or self._page_owner.get(p) != lid]
+        if pinned:
+            return self._refuse('shared-pages', pinned)
         got = self.pool.transfer_pages(lid, pages, lid, dst_pool=dst.pool)
         if got is None:
-            return None
+            return self._refuse('no-capacity')
         for p in pages:
             self._forget(p)
         del self.leases[lid]
@@ -697,6 +733,11 @@ class MemoryPlane:
         if self.on_release is not None:
             self.on_release(lid)          # the local route dies with us
         return lease
+
+    def _refuse(self, reason: str,
+                pinned: Iterable[int] = ()) -> MigrationRefusal:
+        self.stats.migration_refusals += 1
+        return MigrationRefusal(reason, pinned)
 
     def _pick_migration_target(self, lease: KVLease
                                ) -> Optional['MemoryPlane']:
@@ -731,8 +772,11 @@ class MemoryPlane:
         for lid, hit_pages in hit.items():
             lease = self.leases[lid]
             dst = self._pick_migration_target(lease)
-            if dst is None or self.migrate(lid, dst) is None:
-                continue                   # truncation path handles it
+            # a refusal (shared pages, destination filled up mid-batch) is
+            # explicit but non-fatal here: the victim falls through to the
+            # ordinary partial-truncation path below
+            if dst is None or not self.migrate(lid, dst):
+                continue
             out[lid] = LeaseInvalidation(
                 hit_pages, keep=len(lease._pages), resume=lease.filled,
                 released=False, lost_tokens=0.0,
@@ -756,6 +800,12 @@ class MemoryPlane:
             migrated = self._rescue_victims(handles)
         raw = self.pool.reclaim_handles(handles, now, free_survivors=False)
         out = self.apply_pool_invalidation(raw)
+        # a rescued lease left this pool whole, so the truncation pass
+        # cannot also have hit it — if it ever did, merging would let one
+        # victim's lost_tokens be charged under both labels
+        assert not set(out) & set(migrated), \
+            (sorted(set(out) & set(migrated)), 'victim both rescued and '
+             'truncated in one reclamation')
         out.update(migrated)
         return out
 

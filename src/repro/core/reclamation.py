@@ -173,11 +173,15 @@ class ReclamationController:
 
         if self.bus is not None:
             from repro.core.events import ReclamationEvent
+            # rescued victims are named so check_event_ordering can prove
+            # each had its PageMigration (= data-plane copy) published
+            # BEFORE this event frees the source pages for reallocation
             self.bus.publish(
                 ReclamationEvent, n_handles=len(victims),
                 requests=tuple(sorted(truncated)),
                 pages=n_pages,
-                gate_closed=True)
+                gate_closed=True,
+                rescued=tuple(sorted(set(invalidated) - set(truncated))))
 
         if self.on_invalidate is not None and invalidated:
             self.on_invalidate(invalidated)

@@ -24,8 +24,8 @@ from typing import Dict, List, Optional
 
 from repro.core.events import (
     EventBus, MemoryPressureEvent, PageMigration, PreemptionEvent,
-    ReclamationEvent, ReservationChangeEvent, RuntimeEvent, WakeupEvent,
-    check_event_ordering)
+    PrefillHandoff, ReclamationEvent, ReservationChangeEvent, RuntimeEvent,
+    WakeupEvent, check_event_ordering)
 
 __all__ = ['LatencySummary', 'TelemetryRegistry']
 
@@ -134,6 +134,9 @@ class _Counters:
     reservation_changes: int = 0
     pages_migrated: int = 0              # cross-pool rescue pages
     requests_migrated: int = 0           # cross-pool rescued victims
+    prefill_handoffs: int = 0            # disagg: prefill → decode moves
+    handoff_pages: int = 0               # disagg: pages copied at handoff
+    handoff_recompute_tokens: int = 0    # disagg: must stay 0
     per_request_preemptions: Dict[str, int] = field(default_factory=dict)
 
 
@@ -153,6 +156,7 @@ class TelemetryRegistry:
         self.bus = bus
         self.counters = _Counters()
         self.preemption_latencies = LatencySummary(cap=latency_cap)
+        self.handoff_latencies = LatencySummary(cap=latency_cap)
         self._stats = stats              # legacy RuntimeStats mirror
         self._lifecycle = lifecycle      # legacy LifecycleStats mirror
         if stats is not None:
@@ -166,6 +170,7 @@ class TelemetryRegistry:
             MemoryPressureEvent: self._on_pressure,
             ReservationChangeEvent: self._on_reservation,
             PageMigration: self._on_migration,
+            PrefillHandoff: self._on_handoff,
         }
         bus.set_fold(self._on_event)
 
@@ -223,6 +228,13 @@ class TelemetryRegistry:
             self.counters.pages_migrated += ev.n_pages
             self.counters.requests_migrated += 1
 
+    def _on_handoff(self, ev: PrefillHandoff) -> None:
+        c = self.counters
+        c.prefill_handoffs += 1
+        c.handoff_pages += ev.pages_copied
+        c.handoff_recompute_tokens += ev.recompute_tokens
+        self.handoff_latencies.record(ev.latency_s)
+
     # ------------------------------------------------------------------
     @property
     def max_preemptions_per_request(self) -> int:
@@ -244,6 +256,10 @@ class TelemetryRegistry:
             'reservation_changes': c.reservation_changes,
             'pages_migrated': c.pages_migrated,
             'requests_migrated': c.requests_migrated,
+            'prefill_handoffs': c.prefill_handoffs,
+            'handoff_pages': c.handoff_pages,
+            'handoff_recompute_tokens': c.handoff_recompute_tokens,
+            'handoff_latency': self.handoff_latencies.summary(),
             'max_preemptions_per_request': self.max_preemptions_per_request,
             'preemption_latency': self.preemption_latencies.summary(),
         }

@@ -78,10 +78,16 @@ class NodeStats:
 class NodeOrchestrator:
     """Registers engines over one shared runtime and drives the node loop."""
 
-    def __init__(self, runtime: ValveRuntime, *, idle_advance: float = 1e-3):
+    def __init__(self, runtime: ValveRuntime, *, idle_advance: float = 1e-3,
+                 disaggregated: bool = False):
         self.runtime = runtime
         self.clock = runtime.clock
         self.pool = runtime.pool
+        # True marks this node as one half of a disaggregated topology
+        # (repro.serving.disagg.DisaggPlane): cross-pool PageMigration
+        # completion is delegated to the plane's subscriber — exactly one
+        # completer per migration — instead of the node's own handoff
+        self.disaggregated = disaggregated
         self.online: Optional[Engine] = None
         self.offline: List[Engine] = []
         self.names: Dict[str, Engine] = {}
@@ -109,7 +115,8 @@ class NodeOrchestrator:
             self.stats.invalidation_bursts_seen += 1
         elif isinstance(ev, PageMigration) and ev.cross_pool:
             self.stats.migrations_seen += 1
-            self._handoff_migration(ev)
+            if not self.disaggregated:
+                self._handoff_migration(ev)
 
     # ------------------------------------------------------------------
     # Registration
@@ -171,6 +178,13 @@ class NodeOrchestrator:
         loaded of the rest."""
         assert pool is not self.pool and pool not in self.pools, \
             'pool already registered'
+        # names key migration_targets and PageMigration provenance
+        # (src_pool/dst_pool): a duplicate would make rescue events
+        # ambiguous and steer the data-plane copy to the wrong engine
+        taken = {self.pool.name} | {p.name for p in self.pools}
+        assert pool.name not in taken, \
+            f'duplicate pool name {pool.name!r} (names key migration ' \
+            f'targets and PageMigration provenance)'
         assert pool.page_size == self.pool.page_size, \
             (pool.page_size, self.pool.page_size)
         pool.bus = self.runtime.bus
@@ -185,6 +199,17 @@ class NodeOrchestrator:
     def engines(self) -> List[Engine]:
         return ([self.online] if self.online is not None else []) + \
             list(self.offline)
+
+    def engine_of(self, req_id: str) -> Optional[Engine]:
+        """The engine currently holding ``req_id`` (None if unknown) —
+        requests move between engines on this node (cross-pool rescue)
+        and between nodes (disaggregated handoff), so front-end cancel /
+        flush paths resolve the holder per call instead of assuming
+        ``self.online``."""
+        for eng in self.engines:
+            if req_id in eng.requests:
+                return eng
+        return None
 
     # ------------------------------------------------------------------
     # Cross-pool rescue handoff (PageMigration subscriber)

@@ -1,0 +1,4 @@
+"""Disaggregated prefill/decode serving plane (see ``plane.py``)."""
+from repro.serving.disagg.plane import DisaggPlane, DisaggStats
+
+__all__ = ['DisaggPlane', 'DisaggStats']

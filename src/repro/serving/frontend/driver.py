@@ -162,11 +162,22 @@ class AsyncNodeDriver:
         self.kick()
         return stream
 
+    def _engine_holding(self, req_id: str):
+        """Resolve which engine holds ``req_id`` right now.  On a plain
+        node that is ``node.online``; nodes/planes that move requests
+        between engines (cross-pool rescue, disaggregated prefill→decode
+        handoff) expose ``engine_of`` and the driver follows the request
+        wherever it lives."""
+        finder = getattr(self.node, 'engine_of', None)
+        eng = finder(req_id) if finder is not None else None
+        return eng if eng is not None else self.node.online
+
     def cancel_stream(self, req_id: str) -> bool:
-        """Cancel an online request (client disconnect path): the engine
-        releases its lease immediately; the stream gets a terminal
-        ``cancelled`` event."""
-        eng = self.node.online
+        """Cancel an online request (client disconnect path): the holding
+        engine releases its lease immediately — on whichever pool the
+        request sits, including mid-handoff — and the stream gets a
+        terminal ``cancelled`` event."""
+        eng = self._engine_holding(req_id)
         cancelled = eng is not None and eng.cancel(req_id)
         if cancelled:
             self.stats.streams_cancelled += 1
@@ -175,13 +186,18 @@ class AsyncNodeDriver:
 
     def _flush_streams(self) -> None:
         """Diff streamed requests against emitted counts; push deltas and
-        terminal events."""
+        terminal events.  Requests may live on different engines (a
+        disaggregated handoff moves them mid-stream); each holding engine
+        flushes its fused-path lazy tokens once per pass."""
         if not self._streams:
             return
-        eng = self.node.online
-        eng.flush_tokens()      # resolve fused-path lazy tokens (no-op else)
+        flushed: set = set()
         done: List[str] = []
         for rid, stream in self._streams.items():
+            eng = self._engine_holding(rid)
+            if id(eng) not in flushed:
+                flushed.add(id(eng))
+                eng.flush_tokens()   # resolve fused-path lazy tokens
             req = eng.requests[rid]
             while stream.emitted < len(req.generated):
                 stream._q.put_nowait(TokenEvent(

@@ -5,8 +5,9 @@ import pytest
 
 from repro.core.clock import VirtualClock
 from repro.core.events import (
-    EventBus, MemoryPressureEvent, PreemptionEvent, ReclamationEvent,
-    ReservationChangeEvent, WakeupEvent, check_event_ordering)
+    EventBus, MemoryPressureEvent, PageMigration, PreemptionEvent,
+    ReclamationEvent, ReservationChangeEvent, WakeupEvent,
+    check_event_ordering)
 from repro.core.runtime import RuntimeConfig, ValveRuntime
 from repro.core.sim.colocation import NodeSim, SimConfig, run_strategy
 from repro.core.sim.workload import make_workload_pairs
@@ -124,6 +125,55 @@ def test_reservation_change_events():
     for ev in changes:
         assert ev.h_after != ev.h_before
     assert changes[-1].h_after == len(pool.reserved)
+
+
+# ---------------------------------------------------------------------------
+# Copy-before-reallocation: rescued victims need a migration witness
+# ---------------------------------------------------------------------------
+
+def test_rescued_victim_with_prior_migration_passes_ordering():
+    """A ReclamationEvent may name a victim as ``rescued`` only if an
+    earlier cross-pool PageMigration in the same log moved its pages —
+    the data-plane copy runs at that publish, so log order proves the KV
+    left the pool before the reclamation freed the source."""
+    bus = EventBus(VirtualClock())
+    bus.publish(PageMigration, owner='r1', src_pool='A', dst_pool='B',
+                cross_pool=True, n_pages=2)
+    bus.publish(ReclamationEvent, n_handles=1, rescued=('r1',))
+    check_event_ordering(bus.events())
+
+
+def test_rescued_victim_without_witness_fails_ordering():
+    bus = EventBus(VirtualClock())
+    bus.publish(ReclamationEvent, n_handles=1, rescued=('r1',))
+    with pytest.raises(AssertionError):
+        check_event_ordering(bus.events())
+    # the witness rule is not a §5 gate property — relaxing the gate
+    # check (baseline strategies) must NOT relax it
+    with pytest.raises(AssertionError):
+        check_event_ordering(bus.events(), require_gate_closed=False)
+
+
+def test_migration_after_reclamation_is_no_witness():
+    """Order matters: a copy published AFTER the reclamation came too
+    late — the freed source pages could already be reallocated."""
+    bus = EventBus(VirtualClock())
+    bus.publish(ReclamationEvent, n_handles=1, rescued=('r1',))
+    bus.publish(PageMigration, owner='r1', src_pool='A', dst_pool='B',
+                cross_pool=True, n_pages=2)
+    with pytest.raises(AssertionError):
+        check_event_ordering(bus.events())
+
+
+def test_intra_pool_rekey_is_no_witness():
+    """cross_pool=False is an ownership re-key inside one pool — no KV
+    escaped, so it cannot justify a rescue claim."""
+    bus = EventBus(VirtualClock())
+    bus.publish(PageMigration, owner='r1', src_pool='A', dst_pool='A',
+                cross_pool=False, n_pages=2)
+    bus.publish(ReclamationEvent, n_handles=1, rescued=('r1',))
+    with pytest.raises(AssertionError):
+        check_event_ordering(bus.events())
 
 
 # ---------------------------------------------------------------------------

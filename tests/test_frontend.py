@@ -467,3 +467,88 @@ def test_loadgen_replay_is_deterministic():
     assert a.requests_per_s > 0
     assert a.ttft_pct(99) is not None and a.ttft_pct(99) > 0
     assert a.to_dict() == b.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated plane: cancel during the prefill→decode handoff
+# ---------------------------------------------------------------------------
+
+def _disagg_plane():
+    """Minimal two-node disagg plane (online engines only) — the driver
+    runs over it through the same duck-typed node surface."""
+    from repro.serving.disagg import DisaggPlane
+    clock = VirtualClock()
+
+    def side(name, reserved):
+        pool = KVPool(6, 4, page_size=4, reserved_handles=reserved,
+                      name=name)
+        rt = ValveRuntime(pool,
+                          RuntimeConfig(n_devices=1, t_cool_init=0.002),
+                          clock=clock)
+        node = NodeOrchestrator(rt, idle_advance=1e-3, disaggregated=True)
+        node.add_engine(reduced(get_config(ONLINE_ARCH), page_size=4),
+                        _ecfg('online'), seed=0, name=f'{name}-online')
+        return node
+
+    return DisaggPlane(side('prefill', 2), side('decode', 5))
+
+
+def test_cancel_during_handoff_leaks_nothing_on_either_pool():
+    """A client disconnect in EITHER handoff window — (a) prefill done
+    but the lease still on the prefill pool, (b) already migrated and
+    queued on the decode engine but not yet admitted — must release the
+    lease on whichever pool holds it: no page, lease, or invalidation
+    route survives on either side."""
+    plane = _disagg_plane()
+    vocab = plane.online.mcfg.vocab_size
+    pe, de = plane.prefill.online, plane.decode.online
+    free0 = [sum(len(d) for d in p.free_in_handle)
+             for p in (plane.prefill.pool, plane.decode.pool)]
+
+    async def scenario():
+        driver = AsyncNodeDriver(plane)    # no pump: windows stepped by hand
+
+        # --- window (a): RUNNING on prefill, handoff pump not yet run ---
+        s1 = driver.submit_stream(_prompt(vocab, 8, 31), max_new_tokens=8)
+        for _ in range(200):
+            if (s1.req_id in pe.requests
+                    and pe.requests[s1.req_id].state is ReqState.RUNNING):
+                break
+            plane.prefill.step()
+        assert pe.requests[s1.req_id].state is ReqState.RUNNING
+        assert plane.stats.handoffs == 0
+        assert plane.prefill.runtime.memory.live_leases('online') \
+            == [s1.req_id]
+        assert driver.cancel_stream(s1.req_id)
+        await s1.collect()
+        assert s1.finish_reason == 'cancelled'
+        assert pe.requests[s1.req_id].state is ReqState.CANCELLED
+        assert de.requests == {}           # never reached the decode side
+
+        # --- window (b): migrated to decode, queued, not yet admitted ---
+        s2 = driver.submit_stream(_prompt(vocab, 8, 32), max_new_tokens=8)
+        for _ in range(200):
+            plane.prefill.step()
+            plane._pump_handoffs()
+            if s2.req_id in de.queue:
+                break
+        assert s2.req_id in de.queue and s2.req_id not in pe.requests
+        assert plane.stats.handoffs == 1
+        # the migrated lease lives on the DECODE plane now
+        assert plane.prefill.runtime.memory.live_leases('online') == []
+        assert plane.decode.runtime.memory.live_leases('online') \
+            == [s2.req_id]
+        assert driver.cancel_stream(s2.req_id)
+        await s2.collect()
+        assert s2.finish_reason == 'cancelled'
+        assert de.requests[s2.req_id].state is ReqState.CANCELLED
+        assert driver.stats.streams_cancelled == 2
+
+    _run(scenario())
+    # nothing leaked on EITHER pool: every page back, no live lease, no
+    # invalidation route pinning reserved KV
+    for node, f0 in zip((plane.prefill, plane.decode), free0):
+        assert sum(len(d) for d in node.pool.free_in_handle) == f0
+        assert node.runtime.memory.live_leases('online') == []
+        assert node.runtime.invalidation_routes() == []
+    plane.check_invariants()

@@ -12,7 +12,8 @@ import random
 import pytest
 
 from repro.core import eviction
-from repro.core.memory import KVLease, LeaseInvalidation, MemoryPlane
+from repro.core.memory import (KVLease, LeaseInvalidation, MemoryPlane,
+                               MigrationRefusal)
 from repro.serving.kvpool import KVPool, QUARANTINE_PAGE
 
 
@@ -182,6 +183,77 @@ def test_legacy_ids_keep_whole_request_semantics():
     assert inv['legacy'].keep == 0 and inv['legacy'].released
     assert 'legacy' not in pool.pages_of        # survivors freed too
     pl.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Cross-pool migration: explicit refusals + rescue fall-through
+# ---------------------------------------------------------------------------
+
+def test_migrate_refusals_are_explicit_and_leave_source_untouched():
+    """``migrate`` answers with a falsy :class:`MigrationRefusal` naming
+    the cause — never a silent None — and a refused lease keeps every
+    page, ref and fill on the source plane."""
+    src, src_pool = _plane()
+    dst, _ = _plane()
+    prompt = list(range(13))
+    p = src.admit('p', 4, 'offline', prompt=prompt, scope='s')
+    p.note_filled(13)                            # publishes pages 0..2
+    q = src.admit('q', 4, 'offline', prompt=prompt, scope='s')
+    assert q.resume_tokens == 12                 # attached the shared prefix
+
+    ref = src.migrate('nope', dst)
+    assert isinstance(ref, MigrationRefusal) and not ref
+    assert ref.reason == 'unknown-lease' and ref.pinned_pages == ()
+
+    assert src.migrate('p', src).reason == 'self-target'
+
+    before = list(p)
+    ref = src.migrate('p', dst)                  # q pins the shared prefix
+    assert not ref and ref.reason == 'shared-pages'
+    assert set(ref.pinned_pages) == set(before[:3])
+    assert 'pinned_pages' in repr(ref)
+    assert list(p) == before and not p.released  # source untouched
+    assert src.live_leases() == ['p', 'q'] and dst.live_leases() == []
+    assert src.stats.migration_refusals == 3
+    src.check_invariants()
+    dst.check_invariants()
+
+
+def test_reclaim_rescues_private_leases_and_truncates_pinned_ones():
+    """With a migration target set, reclamation rescues what CAN move
+    (private lease: ``migrated_to`` set, ``lost_tokens == 0``, alive on
+    the destination) and falls through to ordinary truncation for what
+    cannot (shared-prefix leases) — charging each victim exactly once."""
+    src, src_pool = _plane()
+    dst, dst_pool = _plane()
+    prompt = list(range(13))
+    p = src.admit('p', 4, 'offline', prompt=prompt, scope='s')
+    p.note_filled(13)
+    q = src.admit('q', 4, 'offline', prompt=prompt, scope='s')
+    q.note_filled(13)
+    r = src.admit('r', 5, 'offline')             # private: sole user/owner
+    r.note_filled(20)
+    src.migration_targets = [dst]
+
+    refusals0 = src.stats.migration_refusals
+    inv = src.reclaim_handles(src_pool.offline_handles())
+
+    # the private lease was rescued whole: same object, re-homed, no loss
+    assert inv['r'].migrated_to == dst_pool.name
+    assert inv['r'].lost_tokens == 0 and not inv['r'].released
+    assert inv['r'].keep == 5 and inv['r'].resume == 20
+    assert src.live_leases() == [] and dst.live_leases() == ['r']
+    assert dst.leases['r'] is r and r.plane is dst
+    assert r.filled == 20 and r.resume_tokens == 20
+    # the pinned leases took the truncation path, counted once, with the
+    # shared-page refusal recorded rather than swallowed
+    for lid in ('p', 'q'):
+        assert inv[lid].migrated_to is None
+        assert inv[lid].lost_tokens > 0
+    assert src.stats.migration_refusals > refusals0
+    assert src.stats.leases_migrated == 1
+    src.check_invariants()
+    dst.check_invariants()
 
 
 # ---------------------------------------------------------------------------

@@ -113,9 +113,14 @@ def test_rescue_zero_recompute_bit_equal():
         assert len(ev.src_pages) == len(ev.dst_pages) == ev.n_pages > 0
 
     # rescued victims are NOT counted as reclamation damage: the
-    # ReclamationEvent lists only truncated requests, never rescued ones
-    for ev in node.runtime.bus.events(ReclamationEvent):
+    # ReclamationEvent lists only truncated requests, never rescued ones —
+    # instead each names its rescued victims in the ``rescued`` field, so
+    # the log itself witnesses copy-before-reallocation ordering
+    recl = node.runtime.bus.events(ReclamationEvent)
+    for ev in recl:
         assert not (set(ev.requests) & rescued)
+        assert not (set(ev.rescued) & set(ev.requests))
+    assert {r for ev in recl for r in ev.rescued} == rescued
 
     # routes died with the migrated leases; both pools/planes consistent
     assert node.runtime.invalidation_routes() == []
@@ -168,6 +173,13 @@ def test_add_pool_and_register_guards():
         node.add_pool(node.pool)                  # the runtime pool itself
     with pytest.raises(AssertionError):
         node.add_pool(KVPool(4, 4, page_size=8))  # page-size mismatch
+    # pool names key PageMigration provenance and MemoryPlane routing —
+    # a duplicate (aux 'poolB' or the runtime pool's own 'poolA') would
+    # make cross-pool events ambiguous, so add_pool refuses it
+    with pytest.raises(AssertionError):
+        node.add_pool(KVPool(4, 4, page_size=4, name='poolB'))
+    with pytest.raises(AssertionError):
+        node.add_pool(KVPool(4, 4, page_size=4, name='poolA'))
     # pool-backed engines must serve a registered aux pool, offline only
     rogue = KVPool(4, 4, page_size=4)
     from repro.models.api import build_model
