@@ -33,6 +33,8 @@ BENCHES = [
     ('shard_scale', 'multi-device plane — mesh scaling + cross-pool rescue tax'),
     ('disagg', 'disaggregated plane — prefill/decode split vs colocated, '
                'zero-recompute handoff'),
+    ('fleet_placement', 'placement plane — global optimizer vs greedy on a '
+                        'heterogeneous 100-node fleet + vectorized-sim gate'),
 ]
 
 
@@ -71,6 +73,8 @@ def main():
                 mod.run(mesh_sizes=(1, 2, 4), warm=12, steps=16, gen=64)
             elif args.fast and name == 'disagg':
                 mod.run(n_online=4, gap=6, n_offline=2)
+            elif args.fast and name == 'fleet_placement':
+                mod.run_smoke()
             else:
                 mod.run()
         except Exception:

@@ -151,6 +151,9 @@ python benchmarks/shard_scale.py --smoke
 echo "== disagg smoke (2-pool handoff: bit-identity + zero-recompute gate) =="
 python benchmarks/disagg.py --smoke
 
+echo "== fleet-placement smoke (global ≥ greedy + vectorized-sim gate) =="
+python benchmarks/fleet_placement.py --smoke
+
 echo "== tier-1 =="
 python -m pytest -x -q
 

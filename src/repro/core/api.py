@@ -242,12 +242,16 @@ def api_surface() -> List[str]:
     from repro.core import events as E
     from repro.core import memory as M
     from repro.core import telemetry as T
+    from repro.core.cluster.placement import (
+        GlobalPlacementPolicy, GPUProfile, PlacementPolicy, TopologyModel)
+    from repro.core.cluster.scheduler import ClusterScheduler
     from repro.core.runtime import ValveRuntime
 
     lines: List[str] = []
     for cls in (ValveSession, PoolSession, ValveRuntime, M.MemoryPlane,
                 M.KVLease, E.EventBus, T.TelemetryRegistry,
-                T.LatencySummary):
+                T.LatencySummary, ClusterScheduler, PlacementPolicy,
+                GlobalPlacementPolicy, GPUProfile, TopologyModel):
         lines.append(f'{cls.__module__}.{cls.__name__}')
         lines += _surface_of(cls, f'  {cls.__name__}')
     lines.append(f'{M.LeaseInvalidation.__module__}.LeaseInvalidation'

@@ -40,6 +40,8 @@ import numpy as np
 
 from repro.core.cluster.perfmodel import (
     GPUTelemetry, NodeTelemetry, WorkloadProfile, profile_workload_from_curve)
+from repro.core.cluster.placement.profiles import (
+    GPUProfile, TopologyModel, make_fleet_profiles)
 from repro.core.cluster.scheduler import (
     ClusterScheduler, OfflineJob, Placement, SchedulerConfig)
 from repro.core.sim.colocation import (
@@ -108,8 +110,12 @@ def make_harvest_jobs(n_jobs: int, sim_cfg: SimConfig, *, seed: int = 0,
                       ) -> List[HarvestJob]:
     """A mix of single- and multi-GPU offline jobs over a few workload
     archetypes, each profiled from the sim (profiles cached per archetype —
-    profiling is the expensive once-per-submission step)."""
-    rng = np.random.default_rng(seed)
+    profiling is the expensive once-per-submission step).
+
+    Seeding is isolated per job (``SeedSequence.spawn``): job *j*'s SLA
+    depends only on ``(seed, j)``, so growing ``n_jobs`` never re-rolls
+    existing jobs and a large submission batch is byte-reproducible."""
+    children = np.random.SeedSequence(seed).spawn(max(n_jobs, 1))
     archetypes = [
         OfflineWorkload('arch-small', prompt_tokens=256, output_tokens=128,
                         max_batch=32),
@@ -135,7 +141,7 @@ def make_harvest_jobs(n_jobs: int, sim_cfg: SimConfig, *, seed: int = 0,
                                    and j % multi_gpu_every == multi_gpu_every - 1) else 1
         prof = WorkloadProfile(f'job{j}', base.mem_points, base.thrput_points,
                                base.m_req, base.mac, n_gpus)
-        sla = float(rng.uniform(*sla_range))
+        sla = float(np.random.default_rng(children[j]).uniform(*sla_range))
         jobs.append(HarvestJob(OfflineJob(prof, sla, job_id=f'job{j}'), arch))
     return jobs
 
@@ -163,6 +169,13 @@ class HarnessConfig:
     n_ramp_nodes: int = 1
     ramp_mult: float = 60.0
     aligned_frac: float = 0.68
+    # placement plane: policy name ('greedy-eq1' | 'global-opt' | any
+    # registered PlacementPolicy) and an optional heterogeneous GPU mix
+    # (catalog-name → weight, see placement.profiles.make_fleet_profiles);
+    # None = homogeneous reference-GPU fleet, no topology model
+    placement: str = 'greedy-eq1'
+    gpu_mix: Optional[Tuple[Tuple[str, float], ...]] = None
+    nodes_per_rack: int = 16
     # also run each colocated epoch slice online-standalone for TTFT/TPOT
     # interference deltas (doubles the sim count)
     measure_baseline: bool = True
@@ -183,6 +196,8 @@ class EpochReport:
     recompute_tokens: float = 0.0     # Algorithm-1 vs FIFO victim cost
     compute_preemptions: int = 0
     reclamations: int = 0
+    max_preempt_per_request: int = 0  # paper invariant: ≤ 1 (any GPU, epoch)
+    solver_wall_s: float = 0.0        # placement-policy solve time (retry)
     ttft_delta: Optional[float] = None    # mean relative vs standalone
     tpot_delta: Optional[float] = None
 
@@ -191,10 +206,14 @@ class ClusterHarness:
     """Epoch-driven closed loop over a fleet of NodeSim-backed nodes."""
 
     def __init__(self, fleet: List[NodeWorkload], jobs: List[HarvestJob],
-                 cfg: Optional[HarnessConfig] = None):
+                 cfg: Optional[HarnessConfig] = None, *,
+                 profiles: Optional[Dict[str, Tuple[GPUProfile, ...]]] = None,
+                 topology: Optional[TopologyModel] = None):
         self.cfg = cfg or HarnessConfig()
         self.fleet = fleet
         self.jobs = jobs
+        self.profiles = profiles        # node → per-GPU catalog entries
+        self.topology = topology
         self._workload_of = {h.job.job_id: h.workload for h in jobs}
         self._thrput_max = {h.job.job_id: h.job.profile.thrput_max
                             for h in jobs}
@@ -203,20 +222,34 @@ class ClusterHarness:
         self.scout_telemetry: Dict[str, NodeTelemetry] = {}
 
     # ------------------------------------------------------------ plumbing
-    def _mem_policy(self):
+    def _gpu_sim(self, node: str, gi: int) -> SimConfig:
+        """The sim config this GPU actually runs: the base config scaled by
+        its catalog profile (heterogeneous fleets), or the base as-is."""
+        if self.profiles is None:
+            return self.cfg.sim
+        return self.profiles[node][gi].scale_sim(self.cfg.sim)
+
+    def _gpu_profile(self, node: str, gi: int) -> Optional[GPUProfile]:
+        return self.profiles[node][gi] if self.profiles is not None else None
+
+    def _rack_of(self, node: str) -> int:
+        return self.topology.rack_of.get(node, 0) if self.topology else 0
+
+    def _mem_policy(self, sim_cfg: SimConfig):
         c = self.cfg
         if c.memory == 'OurMem':
-            return OurMem(c.sim.total_pages, c.sim.page_tokens,
+            return OurMem(sim_cfg.total_pages, sim_cfg.page_tokens,
                           policy=c.eviction_policy)
-        return S.MEMORY_POLICIES[c.memory](c.sim.total_pages,
-                                           c.sim.page_tokens)
+        return S.MEMORY_POLICIES[c.memory](sim_cfg.total_pages,
+                                           sim_cfg.page_tokens)
 
     def _run_gpu_epoch(self, trace: OnlineWorkload,
-                       off: Optional[OfflineWorkload]) -> SimResult:
+                       off: Optional[OfflineWorkload],
+                       sim_cfg: SimConfig) -> SimResult:
         pair = WorkloadPair(trace.name, trace,
                             off or OfflineWorkload('idle'))
         cp = S.COMPUTE_POLICIES[self.cfg.compute]()
-        sim = NodeSim(pair, cp, self._mem_policy(), self.cfg.sim,
+        sim = NodeSim(pair, cp, self._mem_policy(sim_cfg), sim_cfg,
                       offline_enabled=off is not None)
         return sim.run()
 
@@ -235,23 +268,26 @@ class ClusterHarness:
         teles = []
         for node in self.fleet:
             gpus = []
-            for trace in node.gpu_traces:
+            for gi, trace in enumerate(node.gpu_traces):
                 sl = slice_trace(trace, 0.0, c.epoch_s)
                 res = run_online_standalone(
-                    WorkloadPair(sl.name, sl, OfflineWorkload('idle')), c.sim)
-                gpus.append(telemetry_from_sim(res, window=c.epoch_s))
-            tele = NodeTelemetry(node.name, gpus)
+                    WorkloadPair(sl.name, sl, OfflineWorkload('idle')),
+                    self._gpu_sim(node.name, gi))
+                g = telemetry_from_sim(res, window=c.epoch_s)
+                g.profile = self._gpu_profile(node.name, gi)
+                gpus.append(g)
+            tele = NodeTelemetry(node.name, gpus,
+                                 rack=self._rack_of(node.name))
             teles.append(tele)
             self.scout_telemetry[node.name] = tele
-        self.scheduler = ClusterScheduler(teles, c.sched)
+        self.scheduler = ClusterScheduler(teles, c.sched,
+                                          policy=c.placement,
+                                          topology=self.topology)
         return self.scheduler
 
     def submit_all(self) -> int:
-        placed = 0
-        for h in self.jobs:
-            if self.scheduler.place(h.job) is not None:
-                placed += 1
-        return placed
+        placed = self.scheduler.place_all([h.job for h in self.jobs])
+        return len(placed)
 
     def run_epoch(self, epoch: int) -> EpochReport:
         """One closed-loop round: run every GPU's NodeSim over this epoch's
@@ -273,11 +309,14 @@ class ClusterHarness:
         for node in self.fleet:
             gpus = []
             for gi, trace in enumerate(node.gpu_traces):
+                scfg = self._gpu_sim(node.name, gi)
                 sl = slice_trace(trace, t0, t1)
                 p = on_gpu.get((node.name, gi))
                 off = self._workload_of[p.job.job_id] if p else None
-                res = self._run_gpu_epoch(sl, off)
-                gpus.append(telemetry_from_sim(res, window=c.epoch_s))
+                res = self._run_gpu_epoch(sl, off, scfg)
+                g = telemetry_from_sim(res, window=c.epoch_s)
+                g.profile = self._gpu_profile(node.name, gi)
+                gpus.append(g)
                 rep.offline_tokens += res.offline_tokens
                 rep.recompute_tokens += res.recompute_tokens
                 # counters come from the sim's TelemetryRegistry (the fold
@@ -286,20 +325,23 @@ class ClusterHarness:
                 tel = res.telemetry.counters
                 rep.compute_preemptions += tel.preemptions
                 rep.reclamations += tel.reclamations
+                rep.max_preempt_per_request = max(
+                    rep.max_preempt_per_request, res.max_preempt_per_request)
                 if p is not None:
                     job_tokens.setdefault(p.job.job_id, []).append(
                         res.offline_tokens / max(res.horizon, 1e-9))
                 if c.measure_baseline and sl.requests:
                     base = run_online_standalone(
                         WorkloadPair(sl.name, sl, OfflineWorkload('idle')),
-                        c.sim)
+                        scfg)
                     ttft_d += [(res.ttft[k] - base.ttft[k])
                                / max(base.ttft[k], 1e-9)
                                for k in base.ttft if k in res.ttft]
                     tpot_d += [(res.tpot[k] - base.tpot[k])
                                / max(base.tpot[k], 1e-9)
                                for k in base.tpot if k in res.tpot]
-            new_teles.append(NodeTelemetry(node.name, gpus))
+            new_teles.append(NodeTelemetry(node.name, gpus,
+                                           rack=self._rack_of(node.name)))
 
         # report achieved normalized throughput (model-parallel jobs run in
         # lockstep → the slowest shard sets the job's rate)
@@ -315,10 +357,18 @@ class ClusterHarness:
             measured=True)
         rep.gpus_saved_measured = self.scheduler.gpus_saved(measured=True)
 
-        # telemetry refresh + retry (evicted jobs avoid their old node)
+        # telemetry refresh + retry (evicted jobs avoid their old node);
+        # every Eq. 1 input the policies consume must be sim-measured —
+        # the provenance invariant policy swaps are asserted against
         for tele in new_teles:
+            assert all(g.source == 'nodesim' for g in tele.gpus), \
+                'placement must only ever see measured telemetry'
             self.scheduler.update_node(tele)
+        n_reports = len(getattr(self.scheduler.policy, 'reports', []))
         self.scheduler.retry_pending()
+        rep.solver_wall_s = sum(
+            r.wall_time_s for r in
+            getattr(self.scheduler.policy, 'reports', [])[n_reports:])
 
         rep.evictions_total = self.scheduler.evictions
         rep.reschedules_total = self.scheduler.reschedules
@@ -352,4 +402,9 @@ def make_harness(cfg: Optional[HarnessConfig] = None,
         n_jobs = max(cfg.n_nodes * cfg.gpus_per_node // 2, 2)
     jobs = make_harvest_jobs(n_jobs, cfg.sim, seed=cfg.seed,
                              gpus_per_node=cfg.gpus_per_node)
-    return ClusterHarness(fleet, jobs, cfg)
+    profiles = topo = None
+    if cfg.gpu_mix is not None:
+        profiles, topo = make_fleet_profiles(
+            [n.name for n in fleet], cfg.gpus_per_node, mix=cfg.gpu_mix,
+            nodes_per_rack=cfg.nodes_per_rack, seed=cfg.seed)
+    return ClusterHarness(fleet, jobs, cfg, profiles=profiles, topology=topo)

@@ -16,9 +16,12 @@ from __future__ import annotations
 
 import bisect
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+if TYPE_CHECKING:                                     # pragma: no cover
+    from repro.core.cluster.placement.profiles import GPUProfile
 
 MULTI_ADMIT_THRESHOLD = 0.95
 
@@ -108,6 +111,9 @@ class GPUTelemetry:
     mem_trace_free: np.ndarray      # free pages at each sample
     window: Tuple[float, float] = (0.0, 600.0)
     source: str = 'synthetic'
+    # heterogeneous fleets: the catalog entry this GPU was measured under
+    # (placement.profiles.GPUProfile); None = the reference GPU, scalar 1.0
+    profile: Optional['GPUProfile'] = None
 
     def idle_fraction(self) -> float:
         t0, t1 = self.window
@@ -120,6 +126,7 @@ class GPUTelemetry:
 class NodeTelemetry:
     name: str
     gpus: List[GPUTelemetry]
+    rack: int = 0                   # topology coordinate (placement plane)
 
     def free_gpu_indices(self) -> List[int]:
         return list(range(len(self.gpus)))
@@ -185,11 +192,19 @@ def p_multi(gpus: Sequence[GPUTelemetry]) -> float:
 
 def predict_normalized_throughput(w: WorkloadProfile,
                                   gpus: Sequence[GPUTelemetry]) -> float:
-    """Eq. 1 for a candidate GPU set (len == w.n_gpus)."""
+    """Eq. 1 for a candidate GPU set (len == w.n_gpus).
+
+    Heterogeneous fleets: each GPU's catalog ``norm_throughput`` scalar
+    rescales the prediction to the reference GPU the workload profile was
+    measured on (lockstep jobs run at the slowest card's rate), keeping
+    predictions in the same normalized units as achieved throughput.
+    """
     pc = min(p_compute(g) for g in gpus)
     pm = min(p_memory(w, g) for g in gpus)
     px = p_multi(gpus)
-    return pc * pm * px
+    scale = min((g.profile.norm_throughput if g.profile is not None else 1.0)
+                for g in gpus)
+    return pc * pm * px * scale
 
 
 def admissible(w: WorkloadProfile, gpus: Sequence[GPUTelemetry]) -> bool:

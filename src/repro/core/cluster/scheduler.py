@@ -7,6 +7,12 @@ throughput) and whose multi-GPU alignment passes the 0.95 gate.
 
 Monitoring: achieved throughput is reported periodically; jobs that
 persistently violate their SLA are evicted and rescheduled elsewhere.
+
+Placement strategy is pluggable (``placement.policy.PlacementPolicy``):
+``place``/``_score``/``_candidate_sets`` are the per-job primitives every
+policy builds on; ``place_all`` and ``retry_pending`` route through the
+configured policy, so the greedy path ('greedy-eq1') and the global
+optimizer ('global-opt') run on identical telemetry and bookkeeping.
 """
 from __future__ import annotations
 
@@ -14,9 +20,7 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.cluster.perfmodel import (
-    NodeTelemetry, WorkloadProfile, admissible,
-    predict_normalized_throughput)
+from repro.core.cluster.perfmodel import NodeTelemetry, WorkloadProfile
 
 
 @dataclass
@@ -47,7 +51,14 @@ class SchedulerConfig:
 
 class ClusterScheduler:
     def __init__(self, nodes: Sequence[NodeTelemetry],
-                 cfg: Optional[SchedulerConfig] = None):
+                 cfg: Optional[SchedulerConfig] = None, *,
+                 policy='greedy-eq1', topology=None):
+        # runtime import: placement builds on this module's types
+        from repro.core.cluster.placement.policy import (
+            resolve_policy, score_candidate)
+        self._score_candidate = score_candidate
+        self.policy = resolve_policy(policy)
+        self.topology = topology                 # placement.TopologyModel
         self.nodes: Dict[str, NodeTelemetry] = {n.name: n for n in nodes}
         self.cfg = cfg or SchedulerConfig()
         self.placements: Dict[str, Placement] = {}
@@ -82,13 +93,9 @@ class ClusterScheduler:
 
     def _score(self, job: OfflineJob, node: NodeTelemetry,
                gpus: Tuple[int, ...]) -> Optional[float]:
-        gset = [node.gpus[i] for i in gpus]
-        if not admissible(job.profile, gset):
-            return None
-        pred = predict_normalized_throughput(job.profile, gset)
-        if pred < job.sla + self.cfg.sla_slack:
-            return None
-        return pred
+        return self._score_candidate(job, node, gpus,
+                                     sla_slack=self.cfg.sla_slack,
+                                     topology=self.topology)
 
     def place(self, job: OfflineJob,
               avoid: Optional[set] = None) -> Optional[Placement]:
@@ -113,6 +120,12 @@ class ClusterScheduler:
             return None
         self._commit(best)
         return best
+
+    def place_all(self, jobs: Sequence[OfflineJob]) -> List[Placement]:
+        """Place a submission batch through the configured policy (the
+        global optimizer decides jointly; greedy falls back to per-job
+        ``place`` in submission order)."""
+        return self.policy.place_batch(self, jobs)
 
     def _commit(self, p: Placement) -> None:
         self.placements[p.job.job_id] = p
@@ -146,21 +159,24 @@ class ClusterScheduler:
             self.pending.append(p.job)
 
     def retry_pending(self) -> List[Placement]:
-        """Re-attempt pending jobs (called after telemetry refresh).
-        Evicted jobs avoid the node they violated on for this one retry."""
+        """Re-attempt pending jobs through the configured policy (called
+        after telemetry refresh) — eviction/reschedule consults the same
+        optimizer as submission.  Evicted jobs avoid the node they violated
+        on for this one retry; the avoid is consumed whether or not
+        placement succeeds — holding it forever would starve a job whose
+        only viable node is the (possibly recovered) one it was evicted
+        from."""
         todo, self.pending = self.pending, []
-        placed = []
+        avoid = {}
         for job in todo:
-            # the avoid is consumed whether or not placement succeeds —
-            # holding it forever would starve a job whose only viable node
-            # is the (possibly recovered) one it was evicted from
             bad_node = self._evicted_from.pop(job.job_id, None)
-            p = self.place(job, avoid={bad_node} if bad_node else None)
-            if p is not None:
-                placed.append(p)
-                if job.job_id in self._awaiting_reschedule:
-                    self._awaiting_reschedule.discard(job.job_id)
-                    self.reschedules += 1
+            if bad_node is not None:
+                avoid[job.job_id] = {bad_node}
+        placed = self.policy.place_batch(self, todo, avoid=avoid)
+        for p in placed:
+            if p.job.job_id in self._awaiting_reschedule:
+                self._awaiting_reschedule.discard(p.job.job_id)
+                self.reschedules += 1
         return placed
 
     # ------------------------------------------------------------- stats

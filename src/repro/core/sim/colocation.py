@@ -25,6 +25,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.events import (
     EventBus, MemoryPressureEvent, PreemptionEvent, ReclamationEvent,
     WakeupEvent)
@@ -44,6 +46,12 @@ class SimConfig:
     t_decode_gap: float = 0.002
     online_max_batch: int = 32
     miad_tick: float = 0.25          # MIAD/lifecycle maintenance cadence
+    # batched decode fast path: steady pure-decode stretches (online and
+    # offline) execute without the per-request Python inner loop, replaying
+    # the exact scalar float/rng/event sequence — SimResult telemetry is
+    # bit-identical (gated in benchmarks/fleet_placement.py); the 100+-node
+    # fleet harness needs this to stay inside CI budget
+    vectorized: bool = False
     # -- watchdogs (long-horizon workloads tune these instead of tripping
     # the defaults) --
     watchdog_guard_steps: int = 50_000_000   # hard non-termination assert
@@ -508,6 +516,146 @@ class NodeSim:
         return True
 
     # ------------------------------------------------------------------
+    # Batched decode fast path (cfg.vectorized)
+    # ------------------------------------------------------------------
+    def _burst_online_decode(self) -> bool:
+        """Run K back-to-back online decode iterations without the
+        per-request inner loop.
+
+        Bit-identity with the scalar loop is the contract: the clock
+        replays the exact scalar float sequence (``now += t_iter``;
+        ``now += t_gap``), ticks/lifecycle/busy-span calls fire at the
+        same instants, and the only deferred state — per-request
+        ``tokens_done``/``t_last`` — is integer-counted and flushed once,
+        which is exact in float64.  Ticks run inline at their scalar
+        instants; the burst stops one iteration before any finish and
+        breaks at arrivals and offline wake-ups, so the scalar loop
+        handles every state transition.
+        """
+        active = self.active
+        if not active or self.waiting or self.off_inflight is not None:
+            return False
+        for st in active:
+            if not st.prefilled:
+                return False
+        # batch the per-request remaining-token bound over the whole batch
+        k_max = int(np.fromiter(
+            (st.req.output_tokens - st.tokens_done for st in active),
+            dtype=np.int64, count=len(active)).min()) - 1
+        if k_max < 1:
+            return False
+        cfg = self.cfg
+        t_iter, t_gap = cfg.t_decode_iter, cfg.t_decode_gap
+        tick_every = cfg.miad_tick
+        arriv, n_arr = self.arriv, len(self.arriv)
+        cp = self.cp
+        now = self.now
+        last_end = now
+        executed = 0
+        while executed < k_max:
+            i = self.next_arrival
+            if i < n_arr and arriv[i].t_arrive <= now:
+                break            # scalar entry pumps + admits the arrival
+            if executed and now - self._last_tick >= tick_every:
+                self._last_tick = now     # iteration 0's tick ran in run()
+                self.mp.tick(now)
+                self._sample_mem(now)
+            start = now
+            now += t_iter
+            self._note_busy(start, now)
+            if cp is not None:
+                cp.on_online_iter(start, now)
+            last_end = now
+            executed += 1
+            started = False
+            if (self.offline_enabled and cp is not None
+                    and cp.offline_may_start(now)):
+                self.now = now            # dispatch stamps self.now
+                started = self._off_start_dispatch()
+            now += t_gap
+            if started:
+                break            # next scalar entry pays the preemption
+        if executed:
+            for st in active:
+                st.tokens_done += executed
+                st.t_last = last_end
+            self.now = now
+        return executed > 0
+
+    def _burst_offline_decode(self) -> bool:
+        """Run K offline decode dispatches back to back, deferring the
+        per-target completion bookkeeping to one flush.
+
+        Safe to defer because during a pure-decode stretch the deferred
+        facts are write-only: token counts are integers (exact under one
+        batched add), lease fills only move forward and publish nothing
+        (every running request materialized its shared prefix at prefill
+        completion), and MIAD's tick reads handle *allocation*, not fill.
+        The admission probe is replayed exactly per dispatch — same rid
+        counter, rng draws, and alloc calls as the scalar loop — so a
+        success ends the burst and the scalar path prefills it.
+        """
+        if (not self.offline_enabled or self.off_inflight is not None
+                or self.active or self.waiting or self.off_pending
+                or not self.off_running or self._gated_since_wake):
+            return False
+        if (self.next_arrival < len(self.arriv)
+                and self.arriv[self.next_arrival].t_arrive <= self.now):
+            return False         # scalar entry admits the arrival first
+        k_max = int(np.fromiter(
+            (r.out_remaining for r in self.off_running),
+            dtype=np.int64, count=len(self.off_running)).min()) - 1
+        if k_max < 1:
+            return False
+        cfg = self.cfg
+        t_iter, tick_every = cfg.t_decode_iter, cfg.miad_tick
+        horizon = self.pair.online.horizon_s
+        arrivals_done = self.next_arrival >= len(self.arriv)
+        next_arr = (horizon if arrivals_done
+                    else self.arriv[self.next_arrival].t_arrive)
+        w = self.pair.offline
+        cp = self.cp
+        now = self.now
+        executed = 0
+        while executed < k_max:
+            if executed and now - self._last_tick >= tick_every:
+                self._last_tick = now     # iteration 0's tick ran in run()
+                self.mp.tick(now)
+                self._sample_mem(now)
+            if arrivals_done and now >= horizon:
+                break            # run() ends the sim at this entry
+            if cp is not None and not cp.offline_may_start(now):
+                break
+            if now + t_iter >= next_arr:
+                # arrival/horizon lands inside the dispatch — defer the
+                # WHOLE iteration (probe included: its rid/rng/alloc
+                # sequence belongs to the dispatch the scalar path starts)
+                break
+            if len(self.off_running) + len(self.off_pending) < w.max_batch:
+                # _off_admit's probe, replayed exactly
+                rid = f'off-{next(self._off_ids)}'
+                prompt, out = self._off_sizes()
+                pages = self._off_pages_needed(prompt, out)
+                if self.mp.alloc_offline(rid, pages, now,
+                                         self._off_prefix(prompt)):
+                    r = OfflineReq(rid, prompt, out, pages)
+                    self._off_resync(r)
+                    self.off_pending.append(r)
+                    break        # scalar path prefills the admission
+            now += t_iter
+            self.off_busy_until = now
+            executed += 1
+        if executed:
+            for r in self.off_running:
+                r.generated += executed
+                r.out_remaining -= executed
+                r.filled = r.prompt0 + r.generated
+                self.mp.note_filled(r.rid, r.filled)
+            self.result.offline_tokens += executed * len(self.off_running)
+            self.now = now
+        return executed > 0
+
+    # ------------------------------------------------------------------
     def run(self) -> SimResult:
         horizon = self.pair.online.horizon_s
         guard = 0
@@ -531,6 +679,9 @@ class NodeSim:
                 self._last_tick = self.now
                 self.mp.tick(self.now)
                 self._sample_mem(self.now)
+            if self.cfg.vectorized and (self._burst_online_decode()
+                                        or self._burst_offline_decode()):
+                continue
             ran = self._online_dispatch()
             if ran:
                 continue

@@ -82,9 +82,17 @@ def make_online_trace(*, name: str, horizon_s: float = 600.0,
     while t < horizon_s:
         in_burst = (t % burst_every_s) < burst_len_s
         rate = burst_rate if in_burst else base_rate
-        if ramp_at_s is not None and t >= ramp_at_s:
+        ramped = ramp_at_s is not None and t >= ramp_at_s
+        if ramped:
             rate *= ramp_mult
-        t += float(rng.exponential(1.0 / max(rate, 1e-9)))
+        gap = float(rng.exponential(1.0 / max(rate, 1e-9)))
+        if ramp_at_s is not None and not ramped and t + gap > ramp_at_s:
+            # a quiet-period gap that crosses the ramp boundary must not
+            # skip the ramp: by memorylessness, restart the draw at the
+            # boundary with the ramped rate
+            t = ramp_at_s
+            continue
+        t += gap
         if t >= horizon_s:
             break
         prompt = int(np.clip(rng.lognormal(math.log(prompt_mean),
@@ -134,12 +142,17 @@ def make_fleet_workloads(n_nodes: int = 8, gpus_per_node: int = 2, *,
     a quarter of the horizon) and then heat up by ``ramp_mult`` — jobs the
     scheduler places there from scout-epoch telemetry will start violating
     their SLA, driving the eviction/reschedule path.
+
+    Seeding is isolated per node (``SeedSequence.spawn``): node *i*'s trace
+    depends only on ``(seed, i)``, so a 100-node fleet is byte-reproducible
+    and growing ``n_nodes`` never re-rolls the existing nodes.
     """
-    rng = np.random.default_rng(seed)
+    children = np.random.SeedSequence(seed).spawn(n_nodes)
     if ramp_at_s is None:
         ramp_at_s = horizon_s / 4.0
     nodes: List[NodeWorkload] = []
     for i in range(n_nodes):
+        rng = np.random.default_rng(children[i])
         ramping = i < n_ramp_nodes
         aligned = ramping or bool(rng.random() < aligned_frac)
         base = 0.03 + 0.02 * float(rng.random())

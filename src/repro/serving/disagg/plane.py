@@ -108,10 +108,39 @@ class DisaggPlane:
         self.clock = prefill.clock
         self.stats = DisaggStats()
         self.handoffs: List[Tuple[str, str, str]] = []  # (rid, src, dst)
+        # set by pair_cheapest: (src_node, dst_node, tier, cost) — the
+        # interconnect the KV handoff crosses (placement.TopologyModel)
+        self.link: Optional[Tuple[str, str, str, float]] = None
         # one subscription sees every migration between the two pools:
         # transfer_pages publishes on each DISTINCT bus involved (src and
         # dst), so the prefill bus carries both directions exactly once
         prefill.runtime.subscribe(self._on_migration, PageMigration)
+
+    # ------------------------------------------------------------------
+    # Topology-aware pairing (cluster placement plane)
+    # ------------------------------------------------------------------
+    @classmethod
+    def pair_cheapest(cls, prefill_nodes: Dict[str, 'NodeOrchestrator'],
+                      decode_nodes: Dict[str, 'NodeOrchestrator'],
+                      topology) -> 'DisaggPlane':
+        """Build the plane over the candidate pair joined by the cheapest
+        interconnect link.
+
+        ``prefill_nodes``/``decode_nodes`` map cluster node names (the
+        ``TopologyModel``'s coordinates) to candidate orchestrators;
+        ``topology.cheapest_pair`` picks where the prefill→decode KV copy
+        is cheapest (NVLink/PCIe inside a node beat node-local, which
+        beats cross-rack).  The chosen link is recorded on ``plane.link``
+        and reported in :meth:`metrics` as ``handoff_link``.
+        """
+        src, dst, tier, cost = topology.cheapest_pair(
+            list(prefill_nodes), list(decode_nodes))
+        pre, dec = prefill_nodes[src], decode_nodes[dst]
+        assert pre is not dec, \
+            'cheapest pair resolved to one orchestrator — need two pools'
+        plane = cls(pre, dec)
+        plane.link = (src, dst, tier, cost)
+        return plane
 
     # ------------------------------------------------------------------
     # Optional: cross-pool rescue of offline reclamation victims
@@ -348,6 +377,8 @@ class DisaggPlane:
             'offline_finished': sum(len(e.finished) for e in self.offline),
             'handoffs': self.stats.handoffs,
             'handoffs_deferred': self.stats.handoffs_deferred,
+            'handoff_link': self.link,   # (src, dst, tier, cost) | None
+
             'pages_copied': self.stats.pages_copied,
             'rescues': self.stats.rescues,
             # each registry folded the same PrefillHandoff stream

@@ -7,8 +7,8 @@ from repro.core.cluster.harness import (
     HarnessConfig, make_harness, profile_workload_from_sim,
     telemetry_from_sim)
 from repro.core.cluster.perfmodel import (
-    GPUTelemetry, NodeTelemetry, admissible, p_compute, p_memory, p_multi,
-    predict_normalized_throughput, profile_workload,
+    GPUTelemetry, NodeTelemetry, _union_intersection, admissible, p_compute,
+    p_memory, p_multi, predict_normalized_throughput, profile_workload,
     profile_workload_from_curve)
 from repro.core.cluster.scheduler import ClusterScheduler, OfflineJob
 from repro.core.sim.colocation import SimConfig, run_online_standalone
@@ -208,6 +208,55 @@ def test_closed_loop_evicts_and_reschedules_sla_violator():
              if p.node != ramp_node and p.job.job_id in final.achieved]
     assert moved
     assert any(final.achieved[p.job.job_id] >= p.job.sla for p in moved)
+
+
+def test_union_intersection_edge_cases():
+    W = (0.0, 100.0)
+    # empty interval sets
+    assert _union_intersection([], [], W) == (0.0, 0.0)
+    assert _union_intersection([(10.0, 20.0)], [], W) == (0.0, 10.0)
+    # touching (zero-measure overlap) intervals
+    inter, union = _union_intersection([(0.0, 5.0)], [(5.0, 10.0)], W)
+    assert inter == 0.0 and union == pytest.approx(10.0)
+    # fully nested
+    inter, union = _union_intersection([(0.0, 10.0)], [(2.0, 4.0)], W)
+    assert inter == pytest.approx(2.0) and union == pytest.approx(10.0)
+    # identical sets
+    ivs = [(1.0, 3.0), (7.0, 9.0)]
+    inter, union = _union_intersection(ivs, list(ivs), W)
+    assert inter == union == pytest.approx(4.0)
+    # intervals clipped by the window
+    inter, union = _union_intersection([(-5.0, 10.0)], [(5.0, 200.0)], W)
+    assert inter == pytest.approx(5.0) and union == pytest.approx(100.0)
+
+
+def test_p_multi_idle_gpus_count_as_aligned():
+    """Zero busy time on both GPUs → T_∪ == 0 → perfectly aligned (the gate
+    must not reject multi-GPU placement on a fully idle node)."""
+    assert p_multi([_gpu([]), _gpu([])]) == 1.0
+    assert p_multi([_gpu([(0.0, 1.0)])]) == 1.0          # single GPU
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                     # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _iv = st.lists(
+        st.tuples(st.floats(0, 99, allow_nan=False),
+                  st.floats(0.01, 30, allow_nan=False)).map(
+            lambda p: (p[0], min(p[0] + p[1], 100.0))),
+        max_size=6)
+
+    @settings(max_examples=60, deadline=None)
+    @given(_iv, _iv)
+    def test_union_intersection_properties(a, b):
+        inter, union = _union_intersection(a, b, (0.0, 100.0))
+        assert 0.0 <= inter <= union <= 100.0
+        ri, ru = _union_intersection(b, a, (0.0, 100.0))   # symmetric
+        assert inter == pytest.approx(ri) and union == pytest.approx(ru)
 
 
 def test_scheduler_no_double_booking():

@@ -282,3 +282,29 @@ def test_cross_rescue_between_disagg_pools_zero_recompute():
     for ev in recl:
         assert not (set(ev.requests) & rescued)
     plane.check_invariants()
+
+
+def test_pair_cheapest_picks_cheapest_link_and_records_it():
+    """Topology-aware pool pairing (cluster placement plane): the plane is
+    built over the candidate pair whose KV-handoff link is cheapest, and
+    the chosen link is recorded in plane.link / metrics."""
+    from repro.core.cluster.placement import TopologyModel
+
+    clock = VirtualClock()
+
+    def node(pool_name):
+        return _valve_node(
+            KVPool(8, 4, page_size=4, reserved_handles=4, name=pool_name),
+            clock, disaggregated=True, offline=False,
+            prefix=f'{pool_name}-')
+
+    pre_far, pre_near = node('pre-far'), node('pre-near')
+    dec = node('dec')
+    topo = TopologyModel(rack_of={'pA': 1, 'pB': 0, 'dX': 0})
+    plane = DisaggPlane.pair_cheapest(
+        {'pA': pre_far, 'pB': pre_near}, {'dX': dec}, topo)
+    # pB shares dX's rack: node-local beats pA's cross-rack link
+    assert plane.prefill is pre_near and plane.decode is dec
+    assert plane.link == ('pB', 'dX', 'node-local',
+                          topo.link_costs['node-local'])
+    assert plane.metrics()['handoff_link'] == plane.link

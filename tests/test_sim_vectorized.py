@@ -1,0 +1,87 @@
+"""Vectorized NodeSim fast path: ``SimConfig(vectorized=True)`` batches
+decode-only stretches of the inner loop (``_burst_online_decode`` /
+``_burst_offline_decode``) and must be *bit-identical* to the scalar event
+loop — same floating-point timeline, same event stream, same telemetry.
+The fleet benchmark gates the speedup; these tests pin the equivalence on
+a spread of workload shapes (colocated, standalone, shared-prefix,
+decode-heavy) across compute/memory policy combinations.
+"""
+from dataclasses import replace
+
+import pytest
+
+from repro.core.sim.colocation import (
+    SimConfig, run_offline_standalone, run_online_standalone, run_strategy)
+from repro.core.sim.workload import (
+    OfflineWorkload, WorkloadPair, make_online_trace, make_workload_pairs)
+
+
+def _sig(res):
+    """Everything observable about a run: latencies, token counts, busy
+    intervals, memory traces, the typed event stream (repr — carries every
+    field), and the numeric telemetry counters."""
+    tel = None
+    if res.telemetry is not None:
+        t = res.telemetry.counters
+        tel = {k: getattr(t, k) for k in dir(t)
+               if not k.startswith('_')
+               and isinstance(getattr(t, k), (int, float))}
+    return dict(ttft=res.ttft, tpot=res.tpot, off=res.offline_tokens,
+                wasted=res.offline_tokens_wasted, rec=res.recompute_tokens,
+                busy=res.busy_intervals, mt=res.mem_trace_t,
+                mf=res.mem_trace_free, rej=res.rejected,
+                mp=res.max_preempt_per_request, hz=res.horizon,
+                ev=[repr(e) for e in res.events], tel=tel)
+
+
+def _assert_parity(fn, cfg):
+    a = _sig(fn(cfg))
+    b = _sig(fn(replace(cfg, vectorized=True)))
+    for k in a:
+        assert a[k] == b[k], f'vectorized path diverges in {k!r}'
+
+
+_CFG = SimConfig(total_pages=2048)
+_PAIRS = make_workload_pairs(3, horizon_s=120.0)
+
+
+@pytest.mark.parametrize('i', range(len(_PAIRS)))
+@pytest.mark.parametrize('compute,memory', [
+    ('Channel', 'OurMem'), ('KernelPreempt', 'StaticMem')])
+def test_colocated_parity(i, compute, memory):
+    _assert_parity(
+        lambda c: run_strategy(_PAIRS[i], compute, memory, c), _CFG)
+
+
+@pytest.mark.parametrize('i', range(len(_PAIRS)))
+def test_standalone_parity(i):
+    _assert_parity(lambda c: run_online_standalone(_PAIRS[i], c), _CFG)
+    _assert_parity(lambda c: run_offline_standalone(_PAIRS[i], c), _CFG)
+
+
+def test_shared_prefix_mixed_sizes_parity():
+    """The hard case: prefix-share publication, mixed request sizes, and
+    admission probes interleaved with decode bursts (the probe's rng/alloc
+    sequence must land in the same dispatch on both paths)."""
+    off = OfflineWorkload('offmix', prompt_tokens=512, output_tokens=256,
+                          max_batch=32, prompt_choices=(128, 512, 1024),
+                          output_choices=(64, 256, 512),
+                          shared_prefix_tokens=96)
+    on = make_online_trace(name='sp', horizon_s=120.0, base_rate=0.08,
+                           burst_rate=4.0, seed=7)
+    pair = WorkloadPair('sp', on, off)
+    for compute in ('Channel', 'GPreempt'):
+        _assert_parity(
+            lambda c, cp=compute: run_strategy(pair, cp, 'OurMem', c), _CFG)
+
+
+def test_decode_heavy_parity():
+    """The benchmark's speedup-gate scenario: long offline outputs, batch
+    capped below the memory limit (pure decode bursts), sparse online."""
+    off = OfflineWorkload('long', prompt_tokens=256, output_tokens=2048,
+                          max_batch=24)
+    on = make_online_trace(name='sparse', horizon_s=300.0, base_rate=0.02,
+                           burst_rate=0.5, seed=11)
+    pair = WorkloadPair('dh', on, off)
+    _assert_parity(lambda c: run_strategy(pair, 'Channel', 'OurMem', c),
+                   SimConfig(total_pages=8192))
